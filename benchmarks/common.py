@@ -1,0 +1,52 @@
+"""Shared benchmark harness utilities.
+
+Each benchmark module exposes ``run(scale: str) -> list[Row]`` where
+scale is "ci" (fits this 1-core CPU box in ~minutes) or "paper" (the
+Sec.-IV configuration: 125 devices, 25 clusters). Rows are printed by
+run.py as ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(result, us_per_call) with one warmup."""
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def sim_world(scale: str, seed: int = 0):
+    """The Sec.-IV experimental setup (or a CI-sized version of it)."""
+    from repro.configs import TopologyConfig
+    from repro.data import fashion_synth, partition_noniid_labels
+    from repro.models import make_sim_model
+
+    if scale == "paper":
+        devices, clusters, points, steps = 125, 25, 70_000, 600
+    else:
+        devices, clusters, points, steps = 25, 5, 6_000, 150
+    x, y = fashion_synth(num_points=points, seed=seed)
+    data = partition_noniid_labels(x, y, num_devices=devices,
+                                   labels_per_device=3, seed=seed)
+    topo = TopologyConfig(num_devices=devices, num_clusters=clusters,
+                          graph="geometric",
+                          target_spectral_radius=0.7, seed=seed)
+    svm = make_sim_model("svm", data.feature_dim, data.num_classes)
+    return data, topo, svm, steps

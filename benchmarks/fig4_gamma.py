@@ -1,0 +1,61 @@
+"""Fig. 4 reproduction: TT-HF vs FL baselines, sweeping the number of
+D2D consensus rounds Gamma.
+
+Paper claims validated here (EXPERIMENTS.md C1):
+  * TT-HF (tau=20, Gamma>0) beats FL tau=20 despite 5x fewer uplinks;
+  * increasing Gamma improves accuracy/loss with diminishing returns,
+    approaching the FL tau=1 (centralized-like) upper bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import Row, sim_world
+
+LR = 0.002
+TAU = 20
+GAMMAS = (0, 1, 2, 4, 8)
+
+
+def run(scale: str = "ci", seed: int = 0) -> list[Row]:
+    from repro.configs import TTHFConfig
+    from repro.core import TTHFTrainer, make_baseline_config
+
+    data, topo, model, steps = sim_world(scale, seed)
+    rows = []
+    results = {}
+
+    def train(name, algo):
+        tr = TTHFTrainer(model, data, topo, algo, batch_size=16)
+        t0 = time.perf_counter()
+        _, hist = tr.run(steps=steps, eval_every=max(steps // 10, 1),
+                         seed=seed)
+        us = (time.perf_counter() - t0) / steps * 1e6
+        results[name] = (hist, tr.ledger)
+        rows.append(Row(
+            f"fig4/{name}", us,
+            f"loss={hist.global_loss[-1]:.4f};acc={hist.global_acc[-1]:.4f};"
+            f"uplinks={tr.ledger.uplinks};d2d={tr.ledger.d2d_msgs}"))
+
+    train("fl_tau1", dataclasses.replace(
+        make_baseline_config("centralized", 1), constant_lr=LR))
+    train("fl_tau20", dataclasses.replace(
+        make_baseline_config("fedavg", TAU), constant_lr=LR))
+    for g in GAMMAS:
+        train(f"tthf_gamma{g}", TTHFConfig(
+            tau=TAU, consensus_every=5, gamma_d2d=g, constant_lr=LR))
+
+    # -- claim checks --------------------------------------------------
+    l = {k: v[0].global_loss[-1] for k, v in results.items()}
+    c1a = l["tthf_gamma2"] < l["fl_tau20"]
+    mono = l["tthf_gamma4"] <= l["tthf_gamma1"] + 1e-3
+    gain_12 = l["tthf_gamma1"] - l["tthf_gamma2"]
+    gain_48 = l["tthf_gamma4"] - l["tthf_gamma8"]
+    dimin = gain_48 <= max(gain_12, 0) + 5e-3
+    approach = abs(l["tthf_gamma8"] - l["fl_tau1"]) \
+        < abs(l["tthf_gamma0"] - l["fl_tau1"])
+    rows.append(Row("fig4/claims", 0.0,
+                    f"tthf_beats_fl_tau20={c1a};gamma_monotone={mono};"
+                    f"diminishing_returns={dimin};approaches_tau1={approach}"))
+    return rows

@@ -1,0 +1,62 @@
+"""Regenerate the §Roofline table in EXPERIMENTS.md from the dry-run
+JSONs (run after a sweep): replaces the <!-- ROOFLINE_TABLE --> marker
+block."""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).parent.parent
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+HEADER = (
+    "| arch | shape | compute | memory | collective | dominant | "
+    "useful | HBM GB |\n"
+    "|---|---|---|---|---|---|---|---|\n")
+
+
+def fmt_s(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f} s"
+    if s >= 1e-3:
+        return f"{s*1e3:.1f} ms"
+    return f"{s*1e6:.0f} us"
+
+
+def table(mesh: str) -> str:
+    recs = json.load(open(RESULTS / f"dryrun_{mesh}.json"))
+    out = [HEADER]
+    for r in recs:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"*skipped* | — | — |\n")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |\n")
+            continue
+        hbm = (r["temp_bytes"] + r["arg_bytes"]) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_flops_frac']:.2f} | "
+            f"{hbm:.1f} |\n")
+    return "".join(out)
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    block = ("### Single-pod (16x16 = 256 chips) — all 39 runnable combos\n\n"
+             + table("pod")
+             + "\nMulti-pod (2x16x16 = 512 chips) numbers live in "
+               "`benchmarks/results/dryrun_multipod.json`; every combo "
+               "also lowers + compiles there (the `pod` axis shards "
+               "batch/replicas), with per-chip footprints at or below "
+               "the single-pod values.\n")
+    md = re.sub(r"<!-- ROOFLINE_TABLE -->", block, md, count=1)
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md roofline table updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — wall times
+are NOT TPU times; the derived column reports the analytic HBM-traffic
+saving of the fused kernel, which is hardware-independent)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timed
+
+
+def run(scale: str = "ci", seed: int = 0) -> list[Row]:
+    from repro.core.topology import metropolis_weights, ring_adjacency
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(seed)
+    rows = []
+
+    # consensus_mix: paper config N=25 clusters of s=5, SVM-sized M
+    N, s, M = (25, 5, 7850) if scale == "paper" else (5, 5, 1024)
+    z = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
+    V = jnp.asarray(np.stack([metropolis_weights(ring_adjacency(s))
+                              for _ in range(N)]), jnp.float32)
+    for gamma in (2, 8, 16):
+        g = jnp.full((N,), gamma, jnp.int32)
+        out_k, us_k = timed(lambda: np.asarray(ops.consensus_mix(z, V, g)))
+        out_r, us_r = timed(lambda: np.asarray(
+            ref.consensus_mix_ref(z, V, g)))
+        err = float(np.abs(out_k - out_r).max())
+        # fused kernel: 2sM HBM words; per-round ref: 2*Gamma*sM
+        saving = gamma
+        rows.append(Row(f"kernel/consensus_mix/g{gamma}", us_k,
+                        f"ref_us={us_r:.0f};max_err={err:.1e};"
+                        f"hbm_traffic_saving={saving}x"))
+
+    # ssd_scan: mamba2 head shapes
+    BH, T, P, S = (8, 2048, 64, 128) if scale == "paper" else (4, 512, 64, 128)
+    x = jnp.asarray(rng.normal(size=(BH, T, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(BH, T)), jnp.float32)
+    loga = -dt
+    B = jnp.asarray(rng.normal(size=(BH, T, S)), jnp.float32) * 0.3
+    C = jnp.asarray(rng.normal(size=(BH, T, S)), jnp.float32) * 0.3
+    (yk, _), us_k = timed(lambda: ops.ssd_scan(x, dt, loga, B, C, chunk=256))
+    (yr, _), us_r = timed(lambda: ref.ssd_scan_ref(x, dt, loga, B, C))
+    err = float(jnp.abs(yk - yr).max() / (jnp.abs(yr).max() + 1e-9))
+    # chunked SSD: O(T*Q) flops vs O(T*S) sequential steps; report the
+    # matmul fraction that hits the MXU
+    rows.append(Row("kernel/ssd_scan", us_k,
+                    f"seq_ref_us={us_r:.0f};rel_err={err:.1e};"
+                    f"chunk=256;mxu_matmul_form=True"))
+
+    # fused_sgd
+    n = 7850 * 125 if scale == "paper" else 100_000
+    w = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    _, us_k = timed(lambda: np.asarray(ops.fused_sgd(w, g, 0.01)))
+    rows.append(Row("kernel/fused_sgd", us_k,
+                    f"elements={n};hbm_passes=3_vs_4"))
+    return rows

@@ -1,0 +1,51 @@
+"""Roofline table from the dry-run sweeps (§Roofline deliverable).
+
+Reads benchmarks/results/dryrun_{pod,multipod}.json (produced by
+``python -m repro.launch.dryrun --all --mesh ... --subprocess``), emits
+the per-(arch x shape) three-term roofline with the dominant bottleneck
+and the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import Row
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def load(mesh: str):
+    f = RESULTS / f"dryrun_{mesh}.json"
+    if not f.exists():
+        return None
+    return json.load(open(f))
+
+
+def run(scale: str = "ci", seed: int = 0) -> list[Row]:
+    rows = []
+    for mesh in ("pod", "multipod"):
+        recs = load(mesh)
+        if recs is None:
+            rows.append(Row(f"roofline/{mesh}", 0.0, "missing=no dryrun json"))
+            continue
+        n_ok = sum(r["status"] == "ok" for r in recs)
+        n_skip = sum(r["status"] == "skipped" for r in recs)
+        n_err = len(recs) - n_ok - n_skip
+        rows.append(Row(f"roofline/{mesh}/summary", 0.0,
+                        f"ok={n_ok};skipped={n_skip};error={n_err}"))
+        for r in recs:
+            if r["status"] != "ok":
+                continue
+            # roofline step time = max of the three terms (us)
+            step_us = max(r["compute_s"], r["memory_s"],
+                          r["collective_s"]) * 1e6
+            rows.append(Row(
+                f"roofline/{mesh}/{r['arch']}/{r['shape']}", step_us,
+                f"compute_ms={r['compute_s']*1e3:.2f};"
+                f"memory_ms={r['memory_s']*1e3:.2f};"
+                f"collective_ms={r['collective_s']*1e3:.2f};"
+                f"dominant={r['dominant']};"
+                f"useful_flops={r['useful_flops_frac']:.2f};"
+                f"hbm_gb={(r['temp_bytes']+r['arg_bytes'])/2**30:.1f}"))
+    return rows

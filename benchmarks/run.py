@@ -1,0 +1,49 @@
+"""Benchmark harness entrypoint — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Default scale "ci" fits
+this CPU box; ``--scale paper`` runs the Sec.-IV configuration
+(125 devices / 25 clusters / Fashion-synth 70k).
+
+  PYTHONPATH=src python -m benchmarks.run [--scale ci] [--only fig4,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = ("fig4_gamma", "fig5_tau", "fig6_energy", "theory_bound",
+          "kernel_bench", "scale_sync", "topology_ablation", "roofline")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["ci", "paper"], default="ci")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    chosen = (args.only.split(",") if args.only else SUITES)
+    print("name,us_per_call,derived")
+    rc = 0
+    for suite in chosen:
+        mod_name = suite if suite in SUITES else f"{suite}"
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            t0 = time.time()
+            rows = mod.run(scale=args.scale, seed=args.seed)
+            for row in rows:
+                print(row.csv())
+            print(f"_suite/{suite},{(time.time()-t0)*1e6:.0f},ok",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            rc = 1
+            print(f"_suite/{suite},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""Ablation: D2D graph topology / consensus-weight scheme vs
+convergence (ties Lemma 1's lambda_c to end-to-end behaviour).
+
+Denser graphs (smaller spectral radius rho(V - 11^T/s)) mix faster, so
+fewer D2D rounds are needed for the same consensus error — the knob the
+paper's Remark 1 turns. Expectation: at fixed Gamma, loss(complete)
+<= loss(geometric) <= loss(ring); metropolis ~ laplacian.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, sim_world
+
+
+def run(scale: str = "ci", seed: int = 0) -> list[Row]:
+    from repro.configs import TopologyConfig, TTHFConfig
+    from repro.core import TTHFTrainer, build_network
+
+    data, topo_base, model, steps = sim_world(scale, seed)
+    steps = min(steps, 150)
+    algo = TTHFConfig(tau=20, consensus_every=5, gamma_d2d=1,
+                      constant_lr=0.002)
+    rows, finals, lambdas = [], {}, {}
+    for graph, weights in (("ring", "metropolis"),
+                           ("geometric", "metropolis"),
+                           ("geometric", "laplacian"),
+                           ("complete", "metropolis")):
+        topo = dataclasses.replace(topo_base, graph=graph, weights=weights)
+        net = build_network(topo)
+        tr = TTHFTrainer(model, data, topo, algo, batch_size=16)
+        _, hist = tr.run(steps=steps, eval_every=steps, seed=seed)
+        name = f"{graph}_{weights}"
+        finals[name] = hist.global_loss[-1]
+        lambdas[name] = float(net.lambdas.mean())
+        rows.append(Row(f"topology/{name}", 0.0,
+                        f"lambda={lambdas[name]:.3f};"
+                        f"loss={finals[name]:.4f};"
+                        f"consensus_err={hist.consensus_err[-1]:.2e}"))
+
+    # NOTE (measured): a 5-node ring mixes BETTER (lambda~0.54) than
+    # geometric graphs *tuned to the paper's rho=0.7 target* — the
+    # tuning target, not density, is binding at s=5. Claims reflect
+    # that: complete < ring in lambda; geometric ~ 0.7 by construction;
+    # smaller lambda never hurts the loss.
+    lam_ordered = (lambdas["complete_metropolis"]
+                   < lambdas["ring_metropolis"] < 1.0)
+    target_hit = abs(lambdas["geometric_metropolis"] - 0.7) < 0.1
+    ordered = (finals["complete_metropolis"]
+               <= min(finals["geometric_metropolis"],
+                      finals["ring_metropolis"]) + 5e-3)
+    rows.append(Row("topology/claims", 0.0,
+                    f"complete_mixes_fastest={lam_ordered};"
+                    f"geometric_tuned_to_paper_target={target_hit};"
+                    f"smaller_lambda_not_worse_loss={ordered}"))
+    return rows

@@ -1,0 +1,41 @@
+"""Quickstart: TT-HF (Algorithm 1) on the federated image-classification
+task of the paper, next to its two FL baselines — in ~2 minutes on CPU.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+from repro.configs import TopologyConfig, TTHFConfig
+from repro.core import TTHFTrainer, make_baseline_config
+from repro.data import fashion_synth, partition_noniid_labels
+from repro.models import make_sim_model
+
+# 1. A federated world: 25 devices in 5 D2D clusters, non-iid shards
+#    (3 labels per device), geometric graphs tuned to rho ~ 0.7.
+x, y = fashion_synth(num_points=6_000, seed=0)
+data = partition_noniid_labels(x, y, num_devices=25, labels_per_device=3)
+topo = TopologyConfig(num_devices=25, num_clusters=5, graph="geometric",
+                      target_spectral_radius=0.7, seed=0)
+model = make_sim_model("svm", data.feature_dim, data.num_classes)
+
+# 2. TT-HF: tau=20 local SGD steps per global aggregation, D2D consensus
+#    every 5 steps with Gamma=2 rounds, cluster-sampled uplinks.
+STEPS, LR = 120, 0.002
+tthf = TTHFConfig(tau=20, consensus_every=5, gamma_d2d=2, constant_lr=LR)
+
+print(f"{'method':16s} {'loss':>8s} {'acc':>7s} {'uplinks':>8s} {'d2d':>7s}")
+for name, algo in [
+    ("tthf", tthf),
+    ("fl_tau20", dataclasses.replace(make_baseline_config("fedavg", 20),
+                                     constant_lr=LR)),
+    ("fl_tau1", dataclasses.replace(make_baseline_config("centralized", 1),
+                                    constant_lr=LR)),
+]:
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=16)
+    _, hist = tr.run(steps=STEPS, eval_every=STEPS)
+    print(f"{name:16s} {hist.global_loss[-1]:8.4f} "
+          f"{hist.global_acc[-1]:7.3f} {tr.ledger.uplinks:8d} "
+          f"{tr.ledger.d2d_msgs:7d}")
+
+print("\nTT-HF matches/beats FL tau=20 with 5x fewer uplink transmissions;"
+      "\nincrease gamma_d2d to approach the tau=1 upper bound (Fig. 4).")

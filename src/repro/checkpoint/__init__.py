@@ -1,0 +1,5 @@
+from repro.checkpoint.ckpt import save_pytree, restore_pytree, \
+    save_train_state, restore_train_state
+
+__all__ = ["save_pytree", "restore_pytree", "save_train_state",
+           "restore_train_state"]

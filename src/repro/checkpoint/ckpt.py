@@ -1,0 +1,70 @@
+"""Minimal sharding-aware pytree checkpointing (orbax is not available
+offline). Arrays are gathered to host, stored in a single .npz with the
+tree structure in a JSON sidecar entry; restore rebuilds the tree and
+(optionally) re-shards via device_put."""
+from __future__ import annotations
+
+import io
+import json
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save_pytree(path: str, tree) -> None:
+    flat, treedef = _flatten_with_paths(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(flat)}
+    # store the structure via flatten/unflatten of an index tree
+    idx_tree = jax.tree.unflatten(treedef, list(range(len(flat))))
+    arrays["__index__"] = np.frombuffer(
+        json.dumps(_to_jsonable(idx_tree)).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+
+
+def _to_jsonable(t):
+    if isinstance(t, dict):
+        return {"__d__": {k: _to_jsonable(v) for k, v in t.items()}}
+    if isinstance(t, (list, tuple)):
+        return {"__l__": [_to_jsonable(v) for v in t],
+                "__t__": isinstance(t, tuple)}
+    return t
+
+
+def _from_jsonable(t, leaves):
+    if isinstance(t, dict) and "__d__" in t:
+        return {k: _from_jsonable(v, leaves) for k, v in t["__d__"].items()}
+    if isinstance(t, dict) and "__l__" in t:
+        seq = [_from_jsonable(v, leaves) for v in t["__l__"]]
+        return tuple(seq) if t.get("__t__") else seq
+    return leaves[t]
+
+
+def restore_pytree(path: str, shardings=None):
+    data = np.load(path, allow_pickle=False)
+    idx = json.loads(bytes(data["__index__"].tobytes()).decode())
+    leaves = {}
+    for k in data.files:
+        if k.startswith("leaf_"):
+            leaves[int(k[5:])] = data[k]
+    tree = _from_jsonable(idx, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+def save_train_state(path: str, params, opt_state, step: int,
+                     extra: Optional[dict] = None) -> None:
+    save_pytree(path, {"params": params, "opt_state": opt_state,
+                       "step": np.asarray(step),
+                       "extra": extra or {}})
+
+
+def restore_train_state(path: str, shardings=None):
+    t = restore_pytree(path, shardings)
+    return t["params"], t["opt_state"], int(t["step"]), t.get("extra", {})

@@ -1,0 +1,37 @@
+"""TT-HF core — the paper's contribution as a composable JAX module."""
+from repro.core.topology import (
+    Network, build_network, metropolis_weights, laplacian_weights,
+    spectral_radius, check_assumption2, ring_adjacency,
+    complete_adjacency, geometric_adjacency,
+)
+from repro.core.consensus import (
+    mix, mix_once, mix_pytree, cluster_means, consensus_error,
+    divergence_upsilon,
+)
+from repro.core.schedule import adaptive_gamma, fixed_gamma, make_lr_schedule
+from repro.core.sampling import (
+    sample_devices, sampled_global_model, sampled_global_pytree,
+    full_global_pytree, broadcast_pytree,
+)
+from repro.core.theory import (
+    ProblemConstants, check_theorem2_conditions, theorem2_Z, theorem2_nu,
+    bound_curve, lemma1_bound, dispersion_bound,
+)
+from repro.core.energy import CommLedger, E_GLOB_J, DELTA_GLOB_S
+from repro.core.tthf import TTHFTrainer, TTHFState, History, \
+    make_baseline_config
+
+__all__ = [
+    "Network", "build_network", "metropolis_weights", "laplacian_weights",
+    "spectral_radius", "check_assumption2", "ring_adjacency",
+    "complete_adjacency", "geometric_adjacency",
+    "mix", "mix_once", "mix_pytree", "cluster_means", "consensus_error",
+    "divergence_upsilon",
+    "adaptive_gamma", "fixed_gamma", "make_lr_schedule",
+    "sample_devices", "sampled_global_model", "sampled_global_pytree",
+    "full_global_pytree", "broadcast_pytree",
+    "ProblemConstants", "check_theorem2_conditions", "theorem2_Z",
+    "theorem2_nu", "bound_curve", "lemma1_bound", "dispersion_bound",
+    "CommLedger", "E_GLOB_J", "DELTA_GLOB_S",
+    "TTHFTrainer", "TTHFState", "History", "make_baseline_config",
+]

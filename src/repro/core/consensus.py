@@ -1,0 +1,85 @@
+"""D2D consensus operators (eq. 10) — simulation mode.
+
+State layout: device parameters stacked on a leading axis, reshaped per
+cluster to ``(N, s, M)``. One consensus *round* is the block-diagonal
+product ``z <- V_c z`` applied independently per cluster; an *event*
+applies ``Gamma_c`` rounds (possibly different per cluster — devices in
+cluster c stop mixing after Gamma_c rounds, which we express as masked
+selects inside a fori_loop so the whole event stays jittable).
+
+The Pallas kernel (`repro.kernels.consensus_mix`) implements the fused
+Gamma-round product for the TPU target; `use_kernel=True` routes through
+it (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def mix_once(z: jax.Array, V: jax.Array) -> jax.Array:
+    """One consensus round. z: (N, s, M); V: (N, s, s)."""
+    return jnp.einsum("nij,njm->nim", V, z,
+                      preferred_element_type=z.dtype)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def mix(z: jax.Array, V: jax.Array, gamma: jax.Array,
+        use_kernel: bool = False) -> jax.Array:
+    """Apply per-cluster consensus: z_c <- V_c^{gamma_c} z_c.
+
+    z: (N, s, M); V: (N, s, s); gamma: scalar or (N,) int32.
+    """
+    gamma = jnp.asarray(gamma, jnp.int32)
+    if gamma.ndim == 0:
+        gamma = jnp.full((z.shape[0],), gamma)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.consensus_mix(z, V, gamma)
+
+    max_gamma = jnp.max(gamma)
+
+    def body(r, zz):
+        mixed = mix_once(zz, V)
+        keep = (r < gamma)[:, None, None]    # cluster still mixing?
+        return jnp.where(keep, mixed, zz)
+
+    # bounded loop: max over clusters; masked per cluster
+    return jax.lax.fori_loop(0, max_gamma, body, z)
+
+
+def mix_pytree(params, V: jax.Array, gamma: jax.Array, num_clusters: int,
+               use_kernel: bool = False):
+    """Consensus over a pytree whose leaves have leading axis I = N*s.
+
+    Mixing is linear and elementwise across parameters, so each leaf is
+    reshaped (I, ...) -> (N, s, M) and mixed independently.
+    """
+    def one(leaf):
+        I = leaf.shape[0]
+        s = I // num_clusters
+        flat = leaf.reshape(num_clusters, s, -1)
+        mixed = mix(flat, V.astype(flat.dtype), gamma, use_kernel=use_kernel)
+        return mixed.reshape(leaf.shape)
+
+    return jax.tree.map(one, params)
+
+
+def cluster_means(z: jax.Array) -> jax.Array:
+    """(N, s, M) -> (N, M): the targets of perfect consensus."""
+    return z.mean(axis=1)
+
+
+def consensus_error(z: jax.Array) -> jax.Array:
+    """Per-cluster mean squared consensus error (Definition 3):
+    (1/s) sum_i ||e_i||^2 with e_i = z_i - zbar_c. Returns (N,)."""
+    e = z - cluster_means(z)[:, None, :]
+    return jnp.mean(jnp.sum(e * e, axis=-1), axis=1)
+
+
+def divergence_upsilon(z: jax.Array) -> jax.Array:
+    """Definition 2: per-cluster max elementwise spread Upsilon_c.
+    z: (N, s, M) -> (N,)."""
+    return jnp.max(z.max(axis=1) - z.min(axis=1), axis=-1)

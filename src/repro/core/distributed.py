@@ -1,0 +1,274 @@
+"""TT-HF *scale mode*: the paper's two-timescale sync as a first-class
+distributed-training strategy for the model zoo (DESIGN.md §3-4).
+
+Mapping:
+  FL device  -> model replica  = one slice of the (pod, data) axes
+                (each replica holds a full copy, tensor-sharded over
+                 ``model``)
+  cluster    -> a contiguous block of replicas (on the multi-pod mesh a
+                cluster == a pod, so D2D = intra-pod ICI and global
+                aggregation = cross-pod traffic — the paper's
+                cheap-links/expensive-uplink dichotomy, verbatim)
+  local SGD  -> tau microsteps with NO cross-replica collective
+  D2D round  -> block-diagonal mixing einsum over the replica axis
+  global agg -> cluster-sampled, varrho-weighted average + broadcast
+
+One ``train_step`` call = one full aggregation interval T_k (Algorithm 1
+lines 4-15): nested scans [blocks x consensus_every microsteps] keep the
+consensus events static in the HLO (aperiodicity via the *fixed* event
+calendar; the Remark-1 adaptive round count is a simulation-mode
+feature — scale mode takes Gamma from config).
+
+Consensus execution has two modes (a §Perf comparison axis):
+  * ``rounds`` — paper-faithful: Gamma sequential ``z <- V z`` products,
+    one neighbour exchange each (what edge devices must do);
+  * ``fused``  — beyond-paper: precompute W = V^Gamma (numpy, static)
+    and apply ONE mixing einsum; on a TPU mesh every cluster member is
+    reachable, so Gamma exchanges collapse into one collective of the
+    same payload. Identical math (associativity), ~Gamma x less launch
+    + latency cost.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import TopologyConfig
+from repro.core.topology import Network, build_network
+from repro.dist.sharding import drop_hint_axes
+from repro.models.registry import ModelApi
+
+
+@dataclass(frozen=True)
+class TTHFScaleConfig:
+    replicas: int = 16              # I (devices) = replica count
+    cluster_size: int = 4           # s_c
+    tau: int = 20                   # local interval length
+    consensus_every: int = 5        # D2D event calendar
+    gamma_d2d: int = 2              # rounds per event (static)
+    consensus_mode: str = "fused"   # fused | rounds
+    lr: float = 1e-2
+    sample_per_cluster: int = 1
+    graph: str = "ring"             # TPU-native default
+    granularity: str = "dp"         # dp (replica = data rank) | pod
+    seed: int = 0
+
+    @property
+    def num_clusters(self) -> int:
+        assert self.replicas % self.cluster_size == 0
+        return self.replicas // self.cluster_size
+
+    def network(self) -> Network:
+        return build_network(TopologyConfig(
+            num_devices=self.replicas, num_clusters=self.num_clusters,
+            graph=self.graph, seed=self.seed))
+
+
+# ---------------------------------------------------------------------------
+# replica-axis consensus / aggregation (pjit-native: collectives emerge
+# from the replica-axis sharding of the mixing einsum)
+# ---------------------------------------------------------------------------
+
+def _mix_leaf(leaf: jax.Array, W: jax.Array, num_clusters: int) -> jax.Array:
+    """leaf: (R, ...) -> block-diagonal mix over the replica axis."""
+    R = leaf.shape[0]
+    s = R // num_clusters
+    z = leaf.reshape(num_clusters, s, -1)
+    mixed = jnp.einsum("nij,njm->nim", W.astype(leaf.dtype), z)
+    return mixed.reshape(leaf.shape)
+
+
+def consensus_event(params, net: Network, gamma: int, mode: str):
+    if gamma <= 0:
+        return params
+    if mode == "fused":
+        W = np.stack([np.linalg.matrix_power(v, gamma) for v in net.V])
+        W = jnp.asarray(W, jnp.float32)
+        return jax.tree.map(
+            lambda l: _mix_leaf(l, W, net.num_clusters), params)
+    # paper-faithful sequential rounds
+    V = jnp.asarray(net.V, jnp.float32)
+    for _ in range(gamma):
+        params = jax.tree.map(
+            lambda l: _mix_leaf(l, V, net.num_clusters), params)
+    return params
+
+
+def sampled_aggregation(params, net: Network, picks: jax.Array):
+    """eq. (7): w_hat = sum_c varrho_c w_{n_c}; broadcast to all replicas."""
+    varrho = jnp.asarray(net.varrho, jnp.float32)
+    N, s = net.num_clusters, net.cluster_size
+
+    def one(leaf):
+        R = leaf.shape[0]
+        z = leaf.reshape(N, s, -1)
+        chosen = jnp.take_along_axis(
+            z, picks[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        w_hat = jnp.einsum("c,cm->m", varrho.astype(leaf.dtype), chosen)
+        return jnp.broadcast_to(w_hat[None], (R,) + w_hat.shape
+                                ).reshape(leaf.shape)
+
+    return jax.tree.map(one, params)
+
+
+def full_aggregation(params, net: Network):
+    """Star/FedAvg baseline: full-participation weighted mean."""
+    varrho = jnp.asarray(net.varrho, jnp.float32)
+    N, s = net.num_clusters, net.cluster_size
+
+    def one(leaf):
+        R = leaf.shape[0]
+        z = leaf.reshape(N, s, -1).mean(axis=1)
+        w_hat = jnp.einsum("c,cm->m", varrho.astype(leaf.dtype), z)
+        return jnp.broadcast_to(w_hat[None], (R,) + w_hat.shape
+                                ).reshape(leaf.shape)
+
+    return jax.tree.map(one, params)
+
+
+# ---------------------------------------------------------------------------
+# the TT-HF interval step
+# ---------------------------------------------------------------------------
+
+def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
+                         dtype=jnp.bfloat16, remat: bool = True,
+                         sync: str = "tthf"):
+    """Returns step(params_R, batch, picks, step_idx) -> (params_R, loss).
+
+    params_R: every leaf has leading replica axis R.
+    batch: {"tokens": (tau, R, b, T), "labels": ...} — one aggregation
+    interval's worth of microbatches.
+    picks: (N,) int32 sampled representative per cluster.
+    sync: "tthf" (Algorithm 1) | "star" (FedAvg: full participation,
+    no D2D) | "local" (no sync at all — diagnostics).
+    """
+    net = scale.network()
+    assert scale.tau % scale.consensus_every == 0
+    n_blocks = scale.tau // scale.consensus_every
+
+    # which mesh axes carry replicas: dp granularity -> (pod, data);
+    # pod granularity (giant models: a replica needs a whole pod's HBM,
+    # FSDP over `data` stays *inside* the replica) -> (pod,)
+    replica_axes = (("pod",) if scale.granularity == "pod"
+                    else ("pod", "data"))
+
+    def replica_loss(p, mb):
+        # the replica axes are carried by the vmap dim; model/data
+        # hints still apply inside each replica
+        with drop_hint_axes(replica_axes):
+            return model.loss(p, mb, dtype=dtype, remat=remat)
+
+    def microstep(params, mb, lr):
+        """vmapped per-replica SGD (eq. 8-9) — zero cross-replica comms."""
+        losses, grads = jax.vmap(
+            lambda p, m: jax.value_and_grad(replica_loss)(p, m))(params, mb)
+        # lr cast per-leaf: an f32 scalar would promote bf16 params
+        params = jax.tree.map(
+            lambda w, g: w - jnp.asarray(lr, w.dtype) * g.astype(w.dtype),
+            params, grads)
+        return params, jnp.mean(losses)
+
+    def step(params, batch, picks, step_idx):
+        lr = jnp.asarray(scale.lr, jnp.float32)
+        # (tau, R, b, T) -> (blocks, consensus_every, R, b, T)
+        def resh(x):
+            return x.reshape((n_blocks, scale.consensus_every) + x.shape[1:])
+        batch_b = jax.tree.map(resh, batch)
+
+        def block(params, block_batch):
+            def inner(params, mb):
+                params, loss = microstep(params, mb, lr)
+                return params, loss
+            params, losses = jax.lax.scan(inner, params, block_batch)
+            if sync == "tthf":
+                params = consensus_event(params, net, scale.gamma_d2d,
+                                         scale.consensus_mode)
+            return params, jnp.mean(losses)
+
+        params, block_losses = jax.lax.scan(block, params, batch_b)
+        if sync == "tthf":
+            params = sampled_aggregation(params, net, picks)
+        elif sync == "star":
+            params = full_aggregation(params, net)
+        return params, jnp.mean(block_losses)
+
+    return step, net
+
+
+# ---------------------------------------------------------------------------
+# sharding plumbing
+# ---------------------------------------------------------------------------
+
+def replica_axes_tree(axes_tree):
+    """Prefix every logical-axes tuple with the replica axis."""
+    return jax.tree.map(lambda a: ("replica",) + tuple(a), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+TTHF_PARAM_RULES = (
+    ("replica", ("pod", "data")),
+    # within-replica: tensor parallel over model ONLY (a replica must be
+    # self-contained — no fsdp over the replica axes)
+    ("embed", None),
+    ("embed_nomodel", None),
+    ("embed_fsdp", None),
+    ("vocab", "model"),
+    ("q_proj", "model"),
+    ("kv_proj", "model"),
+    ("ffn", "model"),
+    ("experts", "model"),
+    ("expert_ffn", None),
+    ("experts_router", None),
+    ("ssm_in", "model"),
+    ("ssm_heads", "model"),
+    ("ssm_state", None),
+    ("rnn_width", "model"),
+    ("rnn_width_in", None),
+    ("conv_k", None),
+    ("layers", None),
+    ("batch", None),
+)
+
+
+def tthf_shardings(model: ModelApi, scale: TTHFScaleConfig, mesh: Mesh,
+                   param_dtype=jnp.float32):
+    """(abstract replicated params, NamedSharding tree, batch sharding).
+
+    granularity == "pod": the replica axis maps to `pod` only and each
+    replica FSDP-shards its weights over `data` — this is how the 400B
+    MoE holds divergent TT-HF copies (a 16-chip replica cannot).
+    """
+    from repro.dist.sharding import ShardingRules
+    table = dict(TTHF_PARAM_RULES)
+    if scale.granularity == "pod":
+        table.update(replica=("pod",), embed=("data",),
+                     embed_fsdp=("data",), rnn_width_in=("data",),
+                     batch="data")
+    rules = ShardingRules(tuple(table.items()))
+    p_abs, axes = model.abstract_params(dtype=param_dtype)
+    R = scale.replicas
+    p_abs_R = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((R,) + s.shape, s.dtype), p_abs)
+    axes_R = replica_axes_tree(axes)
+    sh = jax.tree.map(
+        lambda a: NamedSharding(mesh, rules.spec(tuple(a), mesh)),
+        axes_R, is_leaf=lambda x: isinstance(x, tuple))
+    # batch (tau, R, b, T): replica dim on the replica axes; per-replica
+    # batch on `data` at pod granularity
+    if scale.granularity == "pod":
+        batch_spec = P(None, "pod", "data", None)
+    else:
+        batch_spec = P(None, ("pod", "data"), None, None)
+    return p_abs_R, sh, NamedSharding(mesh, batch_spec)
+
+
+def stack_replicas(params, replicas: int):
+    """w_i^(0) = w_hat^(0): identical initial copies (server broadcast)."""
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (replicas,) + l.shape), params)

@@ -1,0 +1,60 @@
+"""Energy / delay accounting model (Fig. 6).
+
+The paper evaluates the *total* energy and wall-clock delay incurred to
+reach a target accuracy, under ratios E_D2D/E_Glob and Delta_D2D/
+Delta_Glob. Uplink reference: 24 dBm transmit power for 0.25 s per
+upload [17] -> E_Glob = P_tx * Delta_Glob per device upload.
+
+We count events, then price them:
+
+  uplinks   : devices transmitting model -> server at a global agg
+  downlink  : server broadcast (free for devices, counted separately)
+  d2d_msgs  : one per (device, neighbour) per consensus round
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+DBM24_WATTS = 10 ** ((24 - 30) / 10)      # 24 dBm ~ 0.251 W
+DELTA_GLOB_S = 0.25                        # per-upload delay [17]
+E_GLOB_J = DBM24_WATTS * DELTA_GLOB_S      # Joules per uplink transmission
+
+
+@dataclass
+class CommLedger:
+    """Counts communication events during a run."""
+    uplinks: int = 0
+    broadcasts: int = 0
+    d2d_msgs: int = 0
+    d2d_rounds: int = 0
+    local_steps: int = 0
+
+    def record_aggregation(self, devices_sampled: int) -> None:
+        self.uplinks += devices_sampled
+        self.broadcasts += 1
+
+    def record_consensus(self, rounds_per_cluster, edges_per_cluster) -> None:
+        """rounds/edges: iterables over clusters."""
+        for g, e in zip(rounds_per_cluster, edges_per_cluster):
+            self.d2d_rounds += int(g)
+            self.d2d_msgs += int(g) * 2 * int(e)   # bidirectional
+
+    def record_local_step(self, devices: int = 1) -> None:
+        self.local_steps += devices
+
+    # -- pricing ------------------------------------------------------------
+    def energy(self, e_ratio: float, e_glob: float = E_GLOB_J) -> float:
+        """Total J given E_D2D = e_ratio * E_Glob."""
+        return self.uplinks * e_glob + self.d2d_msgs * e_ratio * e_glob
+
+    def delay(self, d_ratio: float, delta_glob: float = DELTA_GLOB_S,
+              sequential_uplinks: bool = True) -> float:
+        """Total seconds given Delta_D2D = d_ratio * Delta_Glob.
+
+        Uplinks are sequential per aggregation (the scarce-uplink premise);
+        D2D rounds within a cluster run in parallel across devices but
+        rounds are sequential.
+        """
+        up = self.uplinks if sequential_uplinks else self.broadcasts
+        return up * delta_glob + self.d2d_rounds * d_ratio * delta_glob

@@ -1,0 +1,57 @@
+"""Global aggregation with cluster sampling (eq. 7).
+
+At t = t_k the server samples ONE device n_c uniformly from each cluster
+and forms  w_hat = sum_c varrho_c * w_{n_c}.  Unbiasedness w.r.t. the
+cluster means (used in Theorem 1's proof) holds because sampling is
+uniform and consensus keeps E[e_{n_c}] = 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_devices(key: jax.Array, num_clusters: int,
+                   cluster_size: int) -> jax.Array:
+    """(N,) int32 — the sampled local index n_c within each cluster."""
+    return jax.random.randint(key, (num_clusters,), 0, cluster_size)
+
+
+def sampled_global_model(z: jax.Array, picks: jax.Array,
+                         varrho: jax.Array) -> jax.Array:
+    """z: (N, s, M), picks: (N,), varrho: (N,) -> (M,) the new w_hat."""
+    chosen = jnp.take_along_axis(
+        z, picks[:, None, None].astype(jnp.int32), axis=1)[:, 0, :]
+    return jnp.einsum("c,cm->m", varrho.astype(z.dtype), chosen)
+
+
+def sampled_global_pytree(params, picks: jax.Array, varrho: jax.Array,
+                          num_clusters: int):
+    """Pytree version: leaves (I, ...) -> global model leaves (...)
+    broadcast back by the caller."""
+    def one(leaf):
+        I = leaf.shape[0]
+        s = I // num_clusters
+        z = leaf.reshape(num_clusters, s, -1)
+        g = sampled_global_model(z, picks, varrho)
+        return g.reshape(leaf.shape[1:])
+    return jax.tree.map(one, params)
+
+
+def full_global_pytree(params, varrho: jax.Array, num_clusters: int):
+    """Full-participation aggregation (baseline FL): weighted mean of all
+    devices = sum_c varrho_c * (1/s_c) sum_i w_i."""
+    def one(leaf):
+        I = leaf.shape[0]
+        s = I // num_clusters
+        z = leaf.reshape(num_clusters, s, -1).mean(axis=1)
+        g = jnp.einsum("c,cm->m", varrho.astype(z.dtype), z)
+        return g.reshape(leaf.shape[1:])
+    return jax.tree.map(one, params)
+
+
+def broadcast_pytree(global_params, num_devices: int):
+    """Server broadcast: w_i <- w_hat for all i."""
+    return jax.tree.map(
+        lambda g: jnp.broadcast_to(g[None], (num_devices,) + g.shape),
+        global_params)

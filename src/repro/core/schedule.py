@@ -1,0 +1,43 @@
+"""TT-HF schedules: the decaying step size and the aperiodic D2D-round
+rule of Remark 1.
+
+Remark 1:  Gamma_c^(t) = max{ ceil( log(eta_t*phi / (s_c*Upsilon_c^(t)*M))
+                                    / log(lambda_c) ), 0 }
+so that Lemma 1 gives ||e_i^(t)|| <= lambda^Gamma * s_c * Upsilon_c * M
+                              <= eta_t * phi  ==  the Theorem-2 condition
+eps^(t) = eta_t * phi. When local models have already agreed
+(Upsilon small), Gamma = 0 — consensus is aperiodic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedules import paper_schedule, constant
+
+
+def make_lr_schedule(cfg) -> callable:
+    """cfg: TTHFConfig."""
+    if cfg.constant_lr > 0:
+        return constant(cfg.constant_lr)
+    return paper_schedule(cfg.gamma, cfg.alpha)
+
+
+def adaptive_gamma(eta_t: jax.Array, phi: float, upsilon: jax.Array,
+                   lambdas: jax.Array, cluster_size: int,
+                   model_dim: int, max_rounds: int = 64) -> jax.Array:
+    """Remark-1 D2D round counts. upsilon, lambdas: (N,) -> (N,) int32."""
+    target = eta_t * phi
+    # Lemma-1 prefactor s_c * Upsilon_c * M
+    pref = cluster_size * upsilon * model_dim
+    safe_pref = jnp.maximum(pref, 1e-30)
+    ratio = jnp.clip(target / safe_pref, 1e-30, None)
+    # lambda^Gamma <= ratio  =>  Gamma >= log(ratio)/log(lambda)
+    need = jnp.log(ratio) / jnp.log(jnp.clip(lambdas, 1e-6, 1 - 1e-9))
+    gamma = jnp.ceil(need).astype(jnp.int32)
+    gamma = jnp.where(pref <= target, 0, gamma)   # already within target
+    return jnp.clip(gamma, 0, max_rounds)
+
+
+def fixed_gamma(num_clusters: int, rounds: int) -> jax.Array:
+    return jnp.full((num_clusters,), rounds, jnp.int32)

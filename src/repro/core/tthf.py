@@ -1,0 +1,236 @@
+"""Algorithm 1 — TT-HF simulation engine (vmapped device fleet).
+
+The engine runs the exact two-timescale procedure of the paper on a
+stacked device fleet: every pytree leaf carries a leading device axis
+``I = N * s``; local SGD is ``vmap`` over that axis; consensus reshapes
+to ``(N, s, M)`` and applies the block-diagonal mixing; aggregations
+implement the cluster-sampled global model of eq. (7).
+
+Baselines (Sec. IV-B) are the same engine with ``mode``:
+  * ``tthf``        — Algorithm 1 (sampled aggregation + D2D consensus)
+  * ``fedavg``      — star FL, full participation, no D2D (tau as given)
+  * ``centralized`` — star FL with tau = 1 (the paper's upper bound)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TTHFConfig, TopologyConfig
+from repro.core import consensus as cns
+from repro.core import sampling as smp
+from repro.core.energy import CommLedger
+from repro.core.schedule import adaptive_gamma, fixed_gamma, make_lr_schedule
+from repro.core.topology import Network, build_network
+from repro.data.synth import FederatedDataset
+from repro.models.simple import SimModel
+
+
+@dataclass
+class TTHFState:
+    params: Any                  # pytree, leaves (I, ...)
+    global_params: Any           # pytree, leaves (...)
+    t: int
+    key: jax.Array
+
+
+@dataclass
+class History:
+    ts: list = field(default_factory=list)
+    global_loss: list = field(default_factory=list)
+    global_acc: list = field(default_factory=list)
+    dispersion: list = field(default_factory=list)   # A^(t) estimate
+    consensus_err: list = field(default_factory=list)
+    gamma_used: list = field(default_factory=list)
+    uplinks: list = field(default_factory=list)
+    d2d_msgs: list = field(default_factory=list)
+
+    def as_arrays(self) -> dict[str, np.ndarray]:
+        return {k: np.asarray(v) for k, v in dataclasses.asdict(self).items()}
+
+
+class TTHFTrainer:
+    """Drives Algorithm 1 over a :class:`FederatedDataset`."""
+
+    def __init__(self, model: SimModel, data: FederatedDataset,
+                 topo_cfg: TopologyConfig, algo: TTHFConfig,
+                 batch_size: int = 16, eval_x: np.ndarray | None = None,
+                 eval_y: np.ndarray | None = None,
+                 use_kernel: bool = False):
+        assert data.num_devices == topo_cfg.num_devices
+        self.model = model
+        self.data = data
+        self.algo = algo
+        self.net: Network = build_network(topo_cfg)
+        self.batch_size = batch_size
+        self.use_kernel = use_kernel
+        self.eta = make_lr_schedule(algo)
+        self.ledger = CommLedger()
+        self.x = jnp.asarray(data.x)
+        self.y = jnp.asarray(data.y)
+        self.eval_x = jnp.asarray(eval_x) if eval_x is not None else None
+        self.eval_y = jnp.asarray(eval_y) if eval_y is not None else None
+        self.V = jnp.asarray(self.net.V)
+        self.varrho = jnp.asarray(self.net.varrho, jnp.float32)
+        self.lambdas = jnp.asarray(self.net.lambdas, jnp.float32)
+        self._edges = self.net.num_d2d_edges()
+        self.model_dim = None    # set at init()
+
+        self._local_step = jax.jit(self._local_step_impl)
+        self._consensus = jax.jit(self._consensus_impl)
+        self._aggregate = jax.jit(self._aggregate_impl,
+                                  static_argnames=("full",))
+        self._eval = jax.jit(self._eval_impl)
+        self._upsilon = jax.jit(self._upsilon_impl)
+
+    # ------------------------------------------------------------------
+    def init(self, seed: int = 0) -> TTHFState:
+        key = jax.random.PRNGKey(seed)
+        k0, key = jax.random.split(key)
+        w0 = self.model.init(k0)
+        self.model_dim = int(sum(np.prod(l.shape)
+                                 for l in jax.tree.leaves(w0)))
+        params = smp.broadcast_pytree(w0, self.data.num_devices)
+        return TTHFState(params=params, global_params=w0, t=0, key=key)
+
+    # ------------------------------------------------------------------
+    # jitted pieces
+    # ------------------------------------------------------------------
+    def _local_step_impl(self, params, key, eta_t):
+        """One vmapped SGD iteration (eqs. 8-9) for every device."""
+        I, D = self.y.shape
+        keys = jax.random.split(key, I)
+
+        def dev_step(p, k, xd, yd):
+            idx = jax.random.randint(k, (self.batch_size,), 0, D)
+            xb, yb = xd[idx], yd[idx]
+            g = jax.grad(self.model.loss)(p, xb, yb)
+            return jax.tree.map(lambda w, gg: w - eta_t * gg, p, g)
+
+        return jax.vmap(dev_step)(params, keys, self.x, self.y)
+
+    def _consensus_impl(self, params, gamma):
+        return cns.mix_pytree(params, self.V, gamma, self.net.num_clusters,
+                              use_kernel=self.use_kernel)
+
+    def _aggregate_impl(self, params, key, full: bool):
+        if full:
+            g = smp.full_global_pytree(params, self.varrho,
+                                       self.net.num_clusters)
+        else:
+            picks = smp.sample_devices(key, self.net.num_clusters,
+                                       self.net.cluster_size)
+            g = smp.sampled_global_pytree(params, picks, self.varrho,
+                                          self.net.num_clusters)
+        return g, smp.broadcast_pytree(g, self.data.num_devices)
+
+    def _eval_impl(self, global_params):
+        """Global loss F(w_hat) (eq. 3) + accuracy over all local data."""
+        def dev_loss(xd, yd):
+            return self.model.loss(global_params, xd, yd)
+        losses = jax.vmap(dev_loss)(self.x, self.y)
+        loss = jnp.mean(losses)     # equal rho_{i,c}, varrho_c=s/I
+        if self.eval_x is not None:
+            acc = self.model.accuracy(global_params, self.eval_x,
+                                      self.eval_y)
+        else:
+            flat_x = self.x.reshape(-1, self.x.shape[-1])
+            flat_y = self.y.reshape(-1)
+            acc = self.model.accuracy(global_params, flat_x, flat_y)
+        return loss, acc
+
+    def _upsilon_impl(self, params):
+        """Definition-2 divergence per cluster, max over leaves."""
+        ups = []
+        for leaf in jax.tree.leaves(params):
+            z = leaf.reshape(self.net.num_clusters, self.net.cluster_size, -1)
+            ups.append(cns.divergence_upsilon(z))
+        return jnp.max(jnp.stack(ups), axis=0)
+
+    def _dispersion(self, params):
+        """A^(t) sample: sum_c varrho_c ||wbar_c - wbar||^2."""
+        total = 0.0
+        for leaf in jax.tree.leaves(params):
+            z = leaf.reshape(self.net.num_clusters, self.net.cluster_size, -1)
+            means = cns.cluster_means(z)
+            gmean = jnp.einsum("c,cm->m", self.varrho.astype(z.dtype), means)
+            total += jnp.sum(self.varrho *
+                             jnp.sum((means - gmean) ** 2, axis=-1))
+        return total
+
+    def _consensus_error(self, params):
+        total = 0.0
+        for leaf in jax.tree.leaves(params):
+            z = leaf.reshape(self.net.num_clusters, self.net.cluster_size, -1)
+            total += jnp.sum(self.varrho * cns.consensus_error(z))
+        return total
+
+    # ------------------------------------------------------------------
+    def run(self, steps: int, seed: int = 0, eval_every: int = 5,
+            state: TTHFState | None = None,
+            record_dispersion: bool = True) -> tuple[TTHFState, History]:
+        st = state or self.init(seed)
+        hist = History()
+        algo = self.algo
+
+        for t in range(st.t + 1, st.t + steps + 1):
+            eta_t = self.eta(t - 1)
+            st.key, k_step, k_agg = jax.random.split(st.key, 3)
+            st.params = self._local_step(st.params, k_step, eta_t)
+            self.ledger.record_local_step(self.data.num_devices)
+
+            gamma_used = np.zeros((self.net.num_clusters,), np.int32)
+            if algo.is_consensus_step(t):
+                if algo.gamma_d2d >= 0:
+                    gamma = fixed_gamma(self.net.num_clusters, algo.gamma_d2d)
+                else:
+                    ups = self._upsilon(st.params)
+                    gamma = adaptive_gamma(eta_t, algo.phi, ups,
+                                           self.lambdas,
+                                           self.net.cluster_size,
+                                           self.model_dim)
+                st.params = self._consensus(st.params, gamma)
+                gamma_used = np.asarray(gamma)
+                self.ledger.record_consensus(gamma_used, self._edges)
+
+            if algo.is_aggregation_step(t):
+                full = algo.full_participation or algo.mode != "tthf"
+                g, st.params = self._aggregate(st.params, k_agg, full=full)
+                st.global_params = g
+                n_up = (self.data.num_devices if full
+                        else self.net.num_clusters * algo.sample_per_cluster)
+                self.ledger.record_aggregation(n_up)
+
+            if t % eval_every == 0 or t == st.t + steps:
+                loss, acc = self._eval(st.global_params)
+                hist.ts.append(t)
+                hist.global_loss.append(float(loss))
+                hist.global_acc.append(float(acc))
+                if record_dispersion:
+                    hist.dispersion.append(float(self._dispersion(st.params)))
+                    hist.consensus_err.append(
+                        float(self._consensus_error(st.params)))
+                hist.gamma_used.append(gamma_used.copy())
+                hist.uplinks.append(self.ledger.uplinks)
+                hist.d2d_msgs.append(self.ledger.d2d_msgs)
+
+        st.t += steps
+        return st, hist
+
+
+def make_baseline_config(mode: str, tau: int) -> TTHFConfig:
+    """Paper baselines: FL with full participation (tau=1 'centralized'
+    upper bound, or tau=20 per [6])."""
+    if mode == "centralized":
+        return TTHFConfig(mode="centralized", tau=1, full_participation=True,
+                          consensus_every=0, gamma_d2d=0)
+    if mode == "fedavg":
+        return TTHFConfig(mode="fedavg", tau=tau, full_participation=True,
+                          consensus_every=0, gamma_d2d=0)
+    raise ValueError(mode)

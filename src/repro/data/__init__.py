@@ -1,0 +1,9 @@
+from repro.data.synth import fashion_synth, FederatedDataset
+from repro.data.partition import partition_noniid_labels, partition_iid
+from repro.data.tokens import synthetic_token_batches, lm_batch_spec
+
+__all__ = [
+    "fashion_synth", "FederatedDataset",
+    "partition_noniid_labels", "partition_iid",
+    "synthetic_token_batches", "lm_batch_spec",
+]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots:
+
+* ``consensus_mix`` — fused Gamma-round D2D mixing (the paper's hot loop)
+* ``ssd_scan``      — Mamba-2 SSD chunked scan (mamba2/long-context)
+* ``fused_sgd``     — fused parameter update for the tau-step local scan
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit wrapper
+in ``ops.py``; tests assert allclose across shape/dtype sweeps in
+interpret mode.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

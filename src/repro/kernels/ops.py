@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` mode (the
+kernel body executes in Python) — the TPU target flips
+``repro.kernels.INTERPRET`` to False. Wrappers handle padding and expose
+oracle-identical signatures so call-sites can swap kernel <-> ref freely.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import consensus_mix as _cm
+from repro.kernels import fused_sgd as _fs
+from repro.kernels import ssd_scan as _ss
+from repro.kernels import ref
+
+# Flip to False when running on real TPUs.
+INTERPRET = True
+
+
+def consensus_mix(z: jax.Array, V: jax.Array, gamma: jax.Array,
+                  blk_m: int = 512) -> jax.Array:
+    return _cm.consensus_mix(z, V, gamma, blk_m=blk_m, interpret=INTERPRET)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, loga: jax.Array, B: jax.Array,
+             C: jax.Array, chunk: int = 256):
+    """Pads T to a chunk multiple, calls the kernel, trims."""
+    T = x.shape[1]
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, h = _ss.ssd_scan(x, dt, loga, B, C, chunk=chunk, interpret=INTERPRET)
+    return (y[:, :T], h) if pad else (y, h)
+
+
+def fused_sgd(w: jax.Array, g: jax.Array, eta, weight_decay: float = 0.0
+              ) -> jax.Array:
+    return _fs.fused_sgd(w, g, eta, weight_decay=weight_decay,
+                         interpret=INTERPRET)
+
+
+__all__ = ["consensus_mix", "ssd_scan", "fused_sgd", "ref", "INTERPRET"]

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground
+truth; tests sweep shapes/dtypes against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def consensus_mix_ref(z: jax.Array, V: jax.Array,
+                      gamma: jax.Array) -> jax.Array:
+    """z: (N, s, M); V: (N, s, s); gamma: (N,) int32 -> V_c^{gamma_c} z_c.
+
+    Reference: explicit per-round einsum with per-cluster masking.
+    """
+    gamma = jnp.asarray(gamma, jnp.int32)
+    max_gamma = int(jnp.max(gamma)) if gamma.size else 0
+
+    out = z.astype(jnp.float32)
+    Vf = V.astype(jnp.float32)
+    for r in range(max_gamma):
+        mixed = jnp.einsum("nij,njm->nim", Vf, out)
+        keep = (r < gamma)[:, None, None]
+        out = jnp.where(keep, mixed, out)
+    return out.astype(z.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, loga: jax.Array,
+                 B: jax.Array, C: jax.Array,
+                 h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD recurrence, sequential reference.
+
+    x:    (BH, T, P)   per-head inputs
+    dt:   (BH, T)      input gates (discretization steps, > 0)
+    loga: (BH, T)      log decay per step (= dt * A_head, < 0)
+    B:    (BH, T, S)   input projections onto the state
+    C:    (BH, T, S)   output projections
+    h0:   (BH, S, P)   initial state (zeros if None)
+
+    returns y: (BH, T, P), h_final: (BH, S, P)
+
+      h_t = exp(loga_t) * h_{t-1} + dt_t * B_t (x) x_t
+      y_t = C_t @ h_t
+    """
+    BH, T, P = x.shape
+    S = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((BH, S, P), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, lat, bt, ct = inp
+        h = jnp.exp(lat)[:, None, None] * h + \
+            dtt[:, None, None] * bt[:, :, None] * xt[:, None, :]
+        y = jnp.einsum("bs,bsp->bp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(loga, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    return y, h_final
+
+
+def fused_sgd_ref(w: jax.Array, g: jax.Array, eta: jax.Array,
+                  weight_decay: float = 0.0) -> jax.Array:
+    """w <- w - eta * (g + wd * w)."""
+    gg = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
+    return (w.astype(jnp.float32) - eta * gg).astype(w.dtype)

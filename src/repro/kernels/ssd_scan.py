@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (state-space duality).
+
+The SSD recurrence  h_t = a_t h_{t-1} + dt_t B_t (x) x_t ;  y_t = C_t h_t
+is evaluated in chunks of Q tokens (arXiv:2405.21060):
+
+  intra-chunk:  Y += (L o (C B^T) o dt) X        -- quadratic in Q, MXU
+  inter-chunk:  Y += (C o exp(l)) H_prev         -- state broadcast
+  state carry:  H  = exp(l_Q) H_prev + (B o exp(l_Q - l) o dt)^T X
+
+where l is the in-chunk cumulative log decay. The running state H lives
+in a VMEM scratch buffer that persists across the chunk axis of the grid
+(minor-most => sequential), so HBM sees each token exactly once in and
+once out — the memory-optimal schedule for a recurrent scan on TPU.
+
+Grid: (BH, T/Q). Block shapes: X (Q, P), B/C (Q, S), decay rows (1, Q);
+defaults Q=256, S=128, P=64 keep the working set ~0.6 MB << 16 MB VMEM
+and all matmul dims MXU-aligned (Q, S multiples of 128; P=64 packs the
+lane dim at half utilization, the native Mamba-2 head size).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, loga_ref, b_ref, c_ref, y_ref, hfin_ref, h_scr):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    la = loga_ref[0].astype(jnp.float32)      # (Q,)
+    b = b_ref[0].astype(jnp.float32)          # (Q, S)
+    c = c_ref[0].astype(jnp.float32)          # (Q, S)
+
+    l = jnp.cumsum(la)                        # inclusive cumulative log decay
+    q = x.shape[0]
+
+    # intra-chunk: M[t,u] = exp(l_t - l_u) * dt_u  for u <= t
+    g = jnp.dot(c, b.T, preferred_element_type=jnp.float32)   # (Q, Q)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    causal = t_idx >= u_idx
+    decay = jnp.exp(l[:, None] - l[None, :])
+    m = jnp.where(causal, g * decay * dt[None, :], 0.0)
+    y = jnp.dot(m, x, preferred_element_type=jnp.float32)     # (Q, P)
+
+    # inter-chunk: contribution of the carried state
+    h = h_scr[...]                                            # (S, P)
+    c_decayed = c * jnp.exp(l)[:, None]
+    y = y + jnp.dot(c_decayed, h, preferred_element_type=jnp.float32)
+
+    # state update
+    total = l[q - 1]
+    b_decayed = b * (jnp.exp(total - l) * dt)[:, None]        # (Q, S)
+    h_new = jnp.exp(total) * h + jnp.dot(
+        b_decayed.T, x, preferred_element_type=jnp.float32)
+    h_scr[...] = h_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    hfin_ref[0] = h_new.astype(hfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, loga: jax.Array, B: jax.Array,
+             C: jax.Array, chunk: int = 256,
+             interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """x: (BH, T, P), dt/loga: (BH, T), B/C: (BH, T, S).
+
+    Returns (y: (BH, T, P), h_final: (BH, S, P)). T must be a multiple
+    of ``chunk`` (ops.py pads).
+    """
+    BH, T, P = x.shape
+    S = B.shape[-1]
+    assert T % chunk == 0, f"T={T} not a multiple of chunk={chunk}"
+    nc = T // chunk
+
+    y, hfin = pl.pallas_call(
+        _kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, c: (bh, c)),
+            pl.BlockSpec((1, chunk), lambda bh, c: (bh, c)),
+            pl.BlockSpec((1, chunk, S), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, S), lambda bh, c: (bh, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, S, P), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((S, P), jnp.float32)],
+        interpret=interpret,
+        name="ssd_scan",
+    )(x, dt, loga, B, C)
+    return y, hfin

@@ -1,0 +1,160 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Sources:
+* ``compiled.cost_analysis()`` — per-device HLO FLOPs and bytes accessed
+* post-optimization HLO text — collective operand bytes (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute)
+* ``compiled.memory_analysis()`` — per-device HBM footprint
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. cost_analysis and the partitioned HLO are PER DEVICE, so
+
+  compute term    = flops_dev / peak
+  memory term     = bytes_dev / hbm_bw
+  collective term = coll_bytes_dev / ici_bw
+  (equals the brief's global/(chips x bw) forms.)
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g. "bf16[8,4096,128]{2,1,0}"
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+|pred)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op (per device).
+
+    We take the *result* shape(s) on the lhs of each collective line —
+    for all-gather that is the gathered (larger) buffer, for
+    reduce-scatter the scattered one; a reasonable single-number proxy
+    for link traffic either way.
+    """
+    out: dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    counts: dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        if "-done(" in line:   # avoid double counting start/done pairs
+            continue
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1]
+        # shapes on the line up to the opcode occurrence: take the first
+        # shape group (the result type annotation right after '=')
+        seg = line.split("=", 1)[1]
+        shapes = _SHAPE_RE.findall(seg.split(m.group(1))[0])
+        for dtype, dims in shapes:
+            out[op] += _shape_bytes(dtype, dims)
+        counts[op] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+    coll_breakdown: dict
+    peak_memory_dev: float
+    model_flops: float          # 6 * N_active * tokens (per device share)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def to_dict(self):
+        d = asdict(self)
+        d["dominant"] = self.dominant
+        d["useful_flops_frac"] = (
+            self.model_flops / self.flops_dev if self.flops_dev else 0.0)
+        return d
+
+
+def analyze(compiled, *, arch: str, shape, mesh_name: str, chips: int,
+            model_flops_total: float) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    NOTE: XLA's ``cost_analysis()`` visits loop bodies once, so for
+    scan-over-layers models it undercounts by ~the layer count; we use
+    the trip-count-aware HLO walker (``hlo_cost.analyze_hlo``) instead
+    and keep XLA's numbers in the breakdown for reference.
+    """
+    from repro.launch.hlo_cost import analyze_hlo
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # older jax returns [dict]
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                 + getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "output_size_in_bytes", 0))
+    hlo = compiled.as_text()
+    hc = analyze_hlo(hlo)
+    flops = hc.flops
+    byts = hc.bytes
+    coll_total = hc.coll_total
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_dev=flops, bytes_dev=byts, coll_bytes_dev=coll_total,
+        coll_breakdown={
+            **{k: v for k, v in hc.coll_bytes.items() if v},
+            "counts": {k: v for k, v in hc.coll_counts.items() if v},
+            "xla_flops_once": float(cost.get("flops", 0.0)),
+            "xla_bytes_once": float(cost.get("bytes accessed", 0.0)),
+        },
+        peak_memory_dev=peak,
+        model_flops=model_flops_total / chips,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll_total / ICI_BW,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D tokens for train (fwd+bwd), 2*N*D for
+    inference; N = active params."""
+    n = cfg.active_param_count()
+    if shape.phase == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.phase == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

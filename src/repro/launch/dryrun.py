@@ -1,0 +1,254 @@
+import os
+import sys
+
+_flags = (os.environ.get("XLA_FLAGS", "")
+          + " --xla_force_host_platform_device_count=512")
+# XLA's while-loop LICM hoists dtype converts of the remat residual
+# stack OUT of the backward loop, materializing a full fp32 copy of the
+# per-layer activations (2-30 GB) — disable it for TRAINING dry-runs.
+# For SERVING dry-runs LICM must stay ON: it hoists the (loop-invariant)
+# K/V gathers out of the flash kv scan; without it every block re-
+# gathers the full cache. Decide from argv BEFORE jax initializes.
+_shape_arg = ""
+for _i, _a in enumerate(sys.argv):
+    if _a == "--shape" and _i + 1 < len(sys.argv):
+        _shape_arg = sys.argv[_i + 1]
+    elif _a.startswith("--shape="):
+        _shape_arg = _a.split("=", 1)[1]
+_is_train = (_shape_arg in ("", "train_4k")
+             or "--sync" in " ".join(sys.argv))
+if _is_train:
+    _flags += " --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+os.environ["XLA_FLAGS"] = _flags
+# ^ MUST precede any jax import/init: the dry-run builds the production
+#   512-chip mesh out of host placeholder devices (see MULTI-POD DRY-RUN).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, print memory/cost analyses, and dump roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh pod --out benchmarks/results
+  python -m repro.launch.dryrun --all --mesh multipod   # 2x16x16
+
+Each combo can also be run in a fresh subprocess (--subprocess) so one
+failure/compile-OOM cannot take down the sweep; that is how
+``benchmarks/roofline.py`` drives it.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch, get_shape
+from repro.launch.analysis import analyze, model_flops_for
+from repro.launch.mesh import chips_in, make_production_mesh
+from repro.launch.steps import build_program
+from repro.models import build_model
+
+# (arch, shape) combos that are intentionally skipped, with reasons
+# (see DESIGN.md §6).
+SKIPS: dict[tuple[str, str], str] = {
+    ("whisper-small", "long_500k"):
+        "encoder-decoder ASR: 524k-token decode is not meaningful for a "
+        "1500-frame/448-token enc-dec model (DESIGN.md §6).",
+}
+
+
+def build_tthf_program(model, shape, mesh, sync: str, consensus_mode: str,
+                       tau: int = 8, consensus_every: int = 4,
+                       gamma: int = 2):
+    """Lower one full TT-HF interval (Algorithm 1 lines 4-15) on the
+    production mesh: replicas = pod*data slices, clusters = data-blocks
+    (multi-pod: cluster == pod). Used by the §Perf paper-technique
+    hillclimb (--sync tthf-fused / tthf-rounds / star / local)."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.distributed import (
+        TTHFScaleConfig, make_tthf_train_step, tthf_shardings)
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    # giant models: replica = one whole pod (FSDP inside), clusters of
+    # pods; otherwise replica = one data rank, clusters = pods
+    pod_granular = model.cfg.param_count() > 5e10 and "pod" in sizes
+    if pod_granular:
+        R = sizes["pod"]
+        cluster = R
+    else:
+        R = sizes.get("pod", 1) * sizes.get("data", 1)
+        cluster = sizes.get("data", R)      # multipod: cluster == pod
+    scale = TTHFScaleConfig(
+        replicas=R, cluster_size=cluster, tau=tau,
+        consensus_every=consensus_every, gamma_d2d=gamma,
+        consensus_mode=consensus_mode, lr=1e-2, graph="ring",
+        granularity="pod" if pod_granular else "dp")
+    from repro.launch.steps import param_dtype_for
+    step, net = make_tthf_train_step(model, scale, dtype=jnp.bfloat16,
+                                     sync=sync)
+    p_abs, p_sh, b_sh = tthf_shardings(
+        model, scale, mesh, param_dtype=param_dtype_for(model.cfg))
+    b = shape.global_batch // R
+    if pod_granular:
+        # giant-model TT-HF: per-replica microbatch reduced 4x (the
+        # interval still sees tau microbatches; remat stack must fit
+        # next to the FSDP'd weights)
+        b = max(1, b // 4)
+    tb = jax.ShapeDtypeStruct((tau, R, b, shape.seq_len), jnp.int32)
+    batch = {"tokens": tb, "labels": tb}
+    repl = NamedSharding(mesh, P())
+    fn = jax.jit(step,
+                 in_shardings=(p_sh, {"tokens": b_sh, "labels": b_sh},
+                               repl, repl),
+                 out_shardings=(p_sh, repl),
+                 donate_argnums=(0,))
+    picks = jax.ShapeDtypeStruct((net.num_clusters,), jnp.int32)
+    return fn, (p_abs, batch, picks, jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str,
+            verbose: bool = True, sync: str = "baseline",
+            tau: int = 8, consensus_every: int = 4) -> dict:
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    if (arch, shape_name) in SKIPS:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    model = build_model(cfg)
+    t0 = time.time()
+    rules_override = None
+    if os.environ.get("RP_MOE_EP"):
+        from repro.launch.steps import TRAIN_RULES
+        rules_override = TRAIN_RULES.with_overrides(
+            embed_fsdp=None, expert_ffn=("pod", "data"))
+    with mesh:
+        if sync == "baseline":
+            fn, args = build_program(model, shape, mesh,
+                                     rules_override=rules_override)
+        else:
+            mode = "fused" if sync.endswith("fused") else "rounds"
+            base = "tthf" if sync.startswith("tthf") else sync
+            fn, args = build_tthf_program(model, shape, mesh, base, mode,
+                                          tau=tau,
+                                          consensus_every=consensus_every)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print("  memory_analysis:", mem)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+              (cost.get("flops", 0), cost.get("bytes accessed", 0)))
+
+    roof = analyze(compiled, arch=arch, shape=shape, mesh_name=mesh_name,
+                   chips=chips_in(mesh),
+                   model_flops_total=model_flops_for(cfg, shape))
+    rec = roof.to_dict()
+    rec.update(status="ok", lower_s=t_lower, compile_s=t_compile,
+               arg_bytes=float(getattr(mem, "argument_size_in_bytes", 0)),
+               out_bytes=float(getattr(mem, "output_size_in_bytes", 0)),
+               temp_bytes=float(getattr(mem, "temp_size_in_bytes", 0)))
+    if verbose:
+        print(f"  roofline: compute {roof.compute_s*1e3:.2f}ms "
+              f"memory {roof.memory_s*1e3:.2f}ms "
+              f"collective {roof.collective_s*1e3:.2f}ms "
+              f"-> dominant: {roof.dominant}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON output path or dir")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each combo in a fresh interpreter")
+    ap.add_argument("--sync", default="baseline",
+                    choices=["baseline", "star", "local",
+                             "tthf-fused", "tthf-rounds"],
+                    help="lower the TT-HF interval step instead of the "
+                         "standard train/serve step (train_4k only)")
+    ap.add_argument("--tau", type=int, default=8)
+    ap.add_argument("--consensus-every", type=int, default=4)
+    ap.add_argument("--pair-schedule", action="store_true",
+                    help="enable the pair-scheduled flash attention "
+                         "(skips fully-masked blocks; §Perf)")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="expert weights stay put (expert_ffn sharded "
+                         "over data, no FSDP gathers); tokens move (§Perf)")
+    args = ap.parse_args(argv)
+    if args.pair_schedule:
+        from repro.models import attention as _attn
+        _attn.PAIR_SCHEDULE = True
+    if args.moe_ep:
+        os.environ["RP_MOE_EP"] = "1"
+
+    combos = ([(a, s) for a in ARCHS for s in INPUT_SHAPES]
+              if args.all else [(args.arch, args.shape)])
+
+    records = []
+    for arch, shape in combos:
+        if args.subprocess:
+            out = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", arch, "--shape", shape, "--mesh", args.mesh,
+                 "--out", "-"],
+                capture_output=True, text=True, timeout=3600)
+            try:
+                rec = json.loads(out.stdout.splitlines()[-1])
+            except Exception:
+                rec = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                       "status": "error",
+                       "error": (out.stderr or out.stdout)[-2000:]}
+        else:
+            try:
+                rec = run_one(arch, shape, args.mesh,
+                              verbose=args.out != "-", sync=args.sync,
+                              tau=args.tau,
+                              consensus_every=args.consensus_every)
+                rec["sync"] = args.sync
+                rec["tau"] = args.tau
+            except Exception as e:  # noqa: BLE001 — sweep must continue
+                rec = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                       "status": "error", "error":
+                       f"{type(e).__name__}: {e}\n"
+                       + traceback.format_exc()[-1500:]}
+        records.append(rec)
+        status = rec["status"]
+        print(f"== {arch} x {shape} x {args.mesh}: {status}",
+              file=sys.stderr)
+
+    if args.out == "-":
+        print(json.dumps(records[0] if len(records) == 1 else records))
+    elif args.out:
+        import pathlib
+        p = pathlib.Path(args.out)
+        if p.is_dir() or args.all:
+            p.mkdir(parents=True, exist_ok=True)
+            fname = p / f"dryrun_{args.mesh}.json"
+        else:
+            fname = p
+        fname.write_text(json.dumps(records, indent=1))
+        print(f"wrote {fname}", file=sys.stderr)
+
+    n_bad = sum(r["status"] == "error" for r in records)
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Serving driver: batched prefill + decode of a model-zoo arch.
+
+Example (CPU, reduced config):
+  python -m repro.launch.serve --arch mamba2-370m --reduced \
+      --batch 4 --prompt-len 64 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.models import build_model
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    key = jax.random.PRNGKey(args.seed + 1)
+
+    B, T = args.batch, args.prompt_len
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.kind == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.enc_seq_len, cfg.d_model)) * 0.1
+    if cfg.kind in ("encdec", "audio"):
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.enc_seq_len, cfg.d_model)) * 0.1
+
+    total = T + args.gen + (cfg.enc_seq_len if cfg.kind == "vlm" else 0)
+    t0 = time.time()
+    prefill = jax.jit(lambda p, b: model.prefill(
+        p, b, dtype=jnp.float32, cache_dtype=jnp.float32, cache_len=total))
+    logits, cache, pos = prefill(params, batch)
+    t_prefill = time.time() - t0
+    decode = jax.jit(lambda p, t, c, s: model.decode_step(
+        p, t, c, s, dtype=jnp.float32))
+
+    out_tokens = []
+    t0 = time.time()
+    for i in range(args.gen):
+        key, ks = jax.random.split(key)
+        if args.temperature > 0:
+            tok = jax.random.categorical(
+                ks, logits[:, -1] / args.temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out_tokens.append(np.asarray(tok)[:, 0])
+        logits, cache = decode(params, tok.astype(jnp.int32), cache, pos)
+        pos = pos + 1
+    t_decode = time.time() - t0
+
+    gen = np.stack(out_tokens, axis=1)
+    print(f"arch={cfg.name} B={B} prompt={T} gen={args.gen}")
+    print(f"prefill: {t_prefill:.2f}s  decode: {t_decode:.2f}s "
+          f"({args.gen * B / max(t_decode, 1e-9):.1f} tok/s)")
+    print("sampled token ids (first row):", gen[0].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,155 @@
+"""Training driver.
+
+Two modes:
+* ``--mode sim``   — the paper's Algorithm 1 on the federated image task
+                     (Sec. IV experimental setup; runs on this CPU box).
+* ``--mode scale`` — TT-HF as the sync strategy for a model-zoo arch
+                     (``--arch``), on whatever devices exist (use the
+                     dry-run for the production mesh).
+
+Examples:
+  python -m repro.launch.train --mode sim --model svm --steps 200
+  python -m repro.launch.train --mode scale --arch qwen1.5-0.5b \
+      --reduced --steps 2 --sync tthf
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+
+def run_sim(args):
+    import jax
+    from repro.configs import TopologyConfig, TTHFConfig
+    from repro.core import TTHFTrainer, make_baseline_config
+    from repro.data import fashion_synth, partition_noniid_labels
+    from repro.models import make_sim_model
+
+    x, y = fashion_synth(num_points=args.points, seed=args.seed)
+    data = partition_noniid_labels(x, y, num_devices=args.devices,
+                                   labels_per_device=3, seed=args.seed)
+    topo = TopologyConfig(num_devices=args.devices,
+                          num_clusters=args.clusters,
+                          graph="geometric", seed=args.seed)
+    model = make_sim_model(args.model, data.feature_dim, data.num_classes,
+                           hidden=args.hidden)
+    if args.baseline:
+        algo = make_baseline_config(args.baseline, args.tau)
+        algo = dataclasses.replace(algo, constant_lr=args.lr)
+    else:
+        algo = TTHFConfig(tau=args.tau, consensus_every=args.consensus_every,
+                          gamma_d2d=args.gamma, constant_lr=args.lr,
+                          phi=args.phi)
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=args.batch)
+    t0 = time.time()
+    st, hist = tr.run(steps=args.steps, seed=args.seed,
+                      eval_every=args.eval_every)
+    dt = time.time() - t0
+    print(f"steps={args.steps} wall={dt:.1f}s "
+          f"final_loss={hist.global_loss[-1]:.4f} "
+          f"final_acc={hist.global_acc[-1]:.4f} "
+          f"uplinks={tr.ledger.uplinks} d2d_msgs={tr.ledger.d2d_msgs}")
+    if args.out:
+        json.dump({k: np.asarray(v).tolist()
+                   for k, v in hist.as_arrays().items()},
+                  open(args.out, "w"))
+    return 0
+
+
+def run_scale(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.core.distributed import (
+        TTHFScaleConfig, make_tthf_train_step, stack_replicas)
+    from repro.data.tokens import synthetic_token_batches
+    from repro.models import build_model
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+
+    # consensus_every must divide tau (static event calendar): snap to
+    # the nearest divisor <= requested
+    ce = max(1, min(args.consensus_every, args.tau))
+    while args.tau % ce:
+        ce -= 1
+    scale = TTHFScaleConfig(replicas=args.replicas,
+                            cluster_size=args.cluster_size,
+                            tau=args.tau,
+                            consensus_every=ce,
+                            gamma_d2d=args.gamma, lr=args.lr,
+                            consensus_mode=args.consensus_mode)
+    step, net = make_tthf_train_step(model, scale, dtype=jnp.float32,
+                                     sync=args.sync)
+    step = jax.jit(step)
+
+    params = model.init(jax.random.PRNGKey(args.seed))
+    params = stack_replicas(params, scale.replicas)
+    gens = [synthetic_token_batches(args.batch, args.seq, cfg.vocab_size,
+                                    seed=args.seed, shard_id=r)
+            for r in range(scale.replicas)]
+    key = jax.random.PRNGKey(args.seed + 1)
+
+    for outer in range(args.steps):
+        mbs = [[next(g) for _ in range(scale.tau)] for g in gens]
+        batch = {
+            kk: jnp.asarray(np.stack(
+                [[mbs[r][t][kk] for r in range(scale.replicas)]
+                 for t in range(scale.tau)]))
+            for kk in ("tokens", "labels")
+        }
+        key, kp = jax.random.split(key)
+        picks = jax.random.randint(kp, (net.num_clusters,), 0,
+                                   net.cluster_size)
+        t0 = time.time()
+        params, loss = step(params, batch, picks, jnp.asarray(outer))
+        print(f"interval {outer}: loss={float(loss):.4f} "
+              f"({time.time()-t0:.1f}s, tau={scale.tau} local steps, "
+              f"sync={args.sync})")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["sim", "scale"], default="sim")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--tau", type=int, default=20)
+    ap.add_argument("--gamma", type=int, default=2)
+    ap.add_argument("--consensus-every", type=int, default=5)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--out", default=None)
+    # sim
+    ap.add_argument("--model", choices=["svm", "nn"], default="svm")
+    ap.add_argument("--devices", type=int, default=125)
+    ap.add_argument("--clusters", type=int, default=25)
+    ap.add_argument("--points", type=int, default=12_500)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--phi", type=float, default=1.0)
+    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--baseline", choices=["centralized", "fedavg"],
+                    default=None)
+    # scale
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--cluster-size", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--sync", choices=["tthf", "star", "local"],
+                    default="tthf")
+    ap.add_argument("--consensus-mode", choices=["fused", "rounds"],
+                    default="fused")
+    args = ap.parse_args(argv)
+    return run_sim(args) if args.mode == "sim" else run_scale(args)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

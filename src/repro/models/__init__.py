@@ -1,0 +1,4 @@
+from repro.models.registry import ModelApi, build_model
+from repro.models.simple import make_sim_model, SimModel
+
+__all__ = ["ModelApi", "build_model", "make_sim_model", "SimModel"]

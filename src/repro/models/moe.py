@@ -1,0 +1,114 @@
+"""Top-1 (Switch-style) Mixture-of-Experts FFN.
+
+Dispatch/combine are one-hot EINSUMS over token groups (scatter-free —
+see apply_moe's docstring), giving the *active*-FLOPs formulation
+(top_k x dense, not E x) with the expert axis sharded over ``model``
+(expert parallelism) and optional ``expert_ffn`` sharding for the
+weights-stay-put/tokens-move layout (EXPERIMENTS.md §Perf HC4).
+Overflow tokens beyond per-group capacity are dropped (residual passes
+through), the standard Switch behaviour.
+
+Aux losses: Switch load-balance loss E * sum_e f_e * p_e and router
+z-loss; both returned for the trainer to weigh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Px, dense_init
+
+
+def init_moe(key, cfg) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe_num_experts
+    ks = jax.random.split(key, 4)
+    gated = cfg.mlp_variant in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], (d, E), ("embed", "experts_router")),
+        "w_up": dense_init(ks[1], (E, d, f),
+                           ("experts", "embed_fsdp", "expert_ffn")),
+        "w_down": dense_init(ks[2], (E, f, d),
+                             ("experts", "expert_ffn", "embed_fsdp"),
+                             fan_in=f),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[3], (E, d, f),
+                                 ("experts", "embed_fsdp", "expert_ffn"))
+    return p
+
+
+def _group_size(G: int, target: int = 2048) -> int:
+    """Largest divisor of G that is <= target (dispatch tile size)."""
+    if G <= target:
+        return G
+    n = -(-G // target)           # ceil
+    while G % n:
+        n += 1
+    return G // n
+
+
+def apply_moe(p, cfg, x: jax.Array, capacity_factor: float | None = None):
+    """x: (B, T, D) -> (y, aux) with y: (B, T, D).
+
+    Dispatch/combine are ONE-HOT EINSUMS over token groups (no scatter):
+    GSPMD partitions them cleanly — groups follow the batch sharding,
+    the expert axis follows the 'model' sharding — whereas a scatter
+    into an expert-sharded buffer makes the partitioner replicate the
+    whole token stream. Capacity is per group (Switch-style dropping);
+    the dispatch one-hot costs ~(E*c/3F) of the expert FLOPs (~8%).
+    """
+    from repro.dist.sharding import hint
+    B, T, D = x.shape
+    E = cfg.moe_num_experts
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    G = B * T
+    dt = x.dtype
+    s = _group_size(G)
+    n = G // s
+    c = int(max(1, round(s * capacity_factor / E)))
+    xg = hint(x.reshape(n, s, D), ("pod", "data"), None, None)
+
+    logits = jnp.einsum("nsd,de->nse", xg,
+                        p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (n, s, E)
+    eid = jnp.argmax(logits, axis=-1)                        # (n, s)
+    gate = jnp.max(probs, axis=-1)                           # (n, s)
+
+    onehot_e = jax.nn.one_hot(eid, E, dtype=jnp.float32)     # (n, s, E)
+    pos_in_e = jnp.cumsum(onehot_e, axis=1) - onehot_e       # (n, s, E)
+    pos = jnp.sum(pos_in_e * onehot_e, axis=-1)              # (n, s) f32
+    keep = pos < c
+    onehot_c = jax.nn.one_hot(pos.astype(jnp.int32), c,
+                              dtype=jnp.float32)             # (n, s, c)
+    disp = (onehot_e[..., None] * onehot_c[:, :, None, :]
+            * keep[..., None, None]).astype(dt)              # (n, s, E, c)
+    disp = hint(disp, ("pod", "data"), None, "model", None)
+
+    buf = jnp.einsum("nsec,nsd->necd", disp, xg)             # (n, E, c, D)
+    buf = hint(buf, ("pod", "data"), "model", None, None)
+    gated = "w_gate" in p
+    up = jnp.einsum("necd,edf->necf", buf, p["w_up"].astype(dt))
+    up = hint(up, ("pod", "data"), "model", None, None)
+    if gated:
+        g = jnp.einsum("necd,edf->necf", buf, p["w_gate"].astype(dt))
+        g = hint(g, ("pod", "data"), "model", None, None)
+        act = jax.nn.silu(g) if cfg.mlp_variant == "swiglu" \
+            else jax.nn.gelu(g, approximate=True)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    out = jnp.einsum("necf,efd->necd", h, p["w_down"].astype(dt))
+    out = hint(out, ("pod", "data"), "model", None, None)
+    y = jnp.einsum("nsec,necd->nsd", disp, out)              # (n, s, D)
+    y = hint(y, ("pod", "data"), None, None)
+    y = y * gate[..., None].astype(dt)
+
+    # aux: Switch load-balance + z-loss
+    frac_tokens = jnp.mean(onehot_e, axis=(0, 1))            # f_e
+    frac_probs = jnp.mean(probs, axis=(0, 1))                # p_e
+    lb_loss = E * jnp.sum(frac_tokens * frac_probs)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux = {"load_balance": lb_loss, "router_z": z_loss,
+           "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y.reshape(B, T, D), aux

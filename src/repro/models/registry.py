@@ -1,0 +1,133 @@
+"""Model registry: the public API surface of the model zoo.
+
+``build_model(cfg)`` returns a :class:`ModelApi` whose functions are
+pure (params explicit) and jit-friendly. ``abstract_params`` captures
+both parameter ShapeDtypeStructs and the logical-axes tree WITHOUT
+allocating (the Px axes are Python constants, collected during an
+``eval_shape`` trace via a side channel).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as tfm
+from repro.models.common import split_tree
+from repro.serving import engine as serve
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+
+    # -- params ---------------------------------------------------------
+    def init(self, key, dtype=jnp.float32):
+        tree = tfm.init_model(key, self.cfg, dtype)
+        params, _ = split_tree(tree)
+        if dtype != jnp.float32:
+            params = jax.tree.map(lambda x: x.astype(dtype), params)
+        return params
+
+    def abstract_params(self, dtype=jnp.float32):
+        """(ShapeDtypeStruct tree, logical-axes tree) — no allocation."""
+        captured = {}
+
+        def wrapper(key):
+            tree = tfm.init_model(key, self.cfg, jnp.float32)
+            params, axes = split_tree(tree)
+            captured["axes"] = axes
+            if dtype != jnp.float32:
+                params = jax.tree.map(lambda x: x.astype(dtype), params)
+            return params
+
+        shapes = jax.eval_shape(wrapper, jax.random.PRNGKey(0))
+        return shapes, captured["axes"]
+
+    # -- training -------------------------------------------------------
+    def loss(self, params, batch, *, dtype=jnp.bfloat16, remat=True,
+             use_pallas=False):
+        return tfm.loss_fn(params, self.cfg, batch, dtype=dtype,
+                           remat=remat, use_pallas=use_pallas)
+
+    def forward(self, params, batch, *, dtype=jnp.bfloat16, remat=True,
+                use_pallas=False):
+        return tfm.forward(params, self.cfg, batch, dtype=dtype,
+                           remat=remat, use_pallas=use_pallas)
+
+    # -- serving --------------------------------------------------------
+    def prefill(self, params, batch, *, dtype=jnp.bfloat16,
+                cache_dtype=jnp.bfloat16, serve_window=0, remat=True,
+                cache_len=None):
+        return serve.prefill(params, self.cfg, batch, dtype=dtype,
+                             cache_dtype=cache_dtype,
+                             serve_window=serve_window, remat=remat,
+                             cache_len=cache_len)
+
+    def decode_step(self, params, token, cache, pos, *, dtype=jnp.bfloat16,
+                    serve_window=0):
+        return serve.decode_step(params, self.cfg, token, cache, pos,
+                                 dtype=dtype, serve_window=serve_window)
+
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16,
+                   serve_window=0):
+        return serve.init_cache_tree(self.cfg, batch, seq_len, dtype,
+                                     serve_window=serve_window)
+
+    def abstract_cache(self, batch, seq_len, dtype=jnp.bfloat16,
+                       serve_window=0):
+        return jax.eval_shape(
+            lambda: serve.init_cache_tree(self.cfg, batch, seq_len, dtype,
+                                          serve_window=serve_window))
+
+    def cache_axes(self, long_context: bool = False):
+        return serve.cache_logical_axes_tree(self.cfg, long_context)
+
+    # -- abstract inputs (dry-run) ---------------------------------------
+    def input_specs(self, shape: InputShape, *, serve_window: int = 0,
+                    cache_dtype=jnp.bfloat16) -> dict:
+        """ShapeDtypeStruct stand-ins for every input of the step that
+        ``shape`` exercises (train/prefill: token batch [+ stub frontend
+        embeddings]; decode: one token + the full cache + pos)."""
+        cfg = self.cfg
+        B, T = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+
+        def frontend(specs, batch_sz, txt_len):
+            if cfg.kind == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (batch_sz, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16)
+            if cfg.kind in ("encdec", "audio"):
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (batch_sz, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16)
+            return specs
+
+        if shape.phase == "train":
+            t_text = T - (cfg.enc_seq_len if cfg.kind == "vlm" else 0)
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, t_text), i32),
+                "labels": jax.ShapeDtypeStruct((B, t_text), i32),
+            }
+            return {"batch": frontend(specs, B, t_text)}
+
+        if shape.phase == "prefill":
+            t_text = T - (cfg.enc_seq_len if cfg.kind == "vlm" else 0)
+            specs = {"tokens": jax.ShapeDtypeStruct((B, t_text), i32)}
+            return {"batch": frontend(specs, B, t_text)}
+
+        # decode: one token against a cache of length T
+        cache = self.abstract_cache(B, T, cache_dtype,
+                                    serve_window=serve_window)
+        return {
+            "token": jax.ShapeDtypeStruct((B, 1), i32),
+            "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(cfg)

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Griffin recurrent block:
+  branch A: linear -> GeLU
+  branch B: linear -> short causal conv -> RG-LRU
+  merge: A * B -> out-proj
+
+RG-LRU (per channel):
+  r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+  i_t = sigmoid(W_x x_t + b_x)            input gate
+  a_t = exp(c * softplus(Lambda) * (-r_t))     in (0,1),  c = 8
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Full-sequence path uses an associative scan over (a, b) pairs —
+O(log T) depth, compact HLO; decode is a single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Px, dense_init, zeros_init
+
+RG_C = 8.0
+
+
+def _width(cfg):
+    return cfg.rglru_width or cfg.d_model
+
+
+def init_rglru(key, cfg) -> dict:
+    d = cfg.d_model
+    w = _width(cfg)
+    ks = jax.random.split(key, 6)
+    conv_k = cfg.rglru_conv_width
+    return {
+        "w_gelu": dense_init(ks[0], (d, w), ("embed", "rnn_width")),
+        "w_rec": dense_init(ks[1], (d, w), ("embed", "rnn_width")),
+        "conv": Px(jax.random.normal(ks[2], (conv_k, w)) * 0.1,
+                   ("conv_k", "rnn_width")),
+        "w_a": dense_init(ks[3], (w, w), ("rnn_width_in", "rnn_width")),
+        "b_a": zeros_init((w,), ("rnn_width",)),
+        "w_x": dense_init(ks[4], (w, w), ("rnn_width_in", "rnn_width")),
+        "b_x": zeros_init((w,), ("rnn_width",)),
+        # Lambda init so that a^c ~ U[0.9, 0.999] at r=1 (paper App. A)
+        "lam": Px(jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / RG_C)), ("rnn_width",)),
+        "w_out": dense_init(ks[5], (w, d), ("rnn_width", "embed"), fan_in=w),
+    }
+
+
+def _gates(p, xb):
+    """xb: (..., w) -> (a, beta_x) with a the decay, beta the input scale."""
+    r = jax.nn.sigmoid(xb @ p["w_a"].astype(xb.dtype)
+                       + p["b_a"].astype(xb.dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(xb @ p["w_x"].astype(xb.dtype)
+                       + p["b_x"].astype(xb.dtype)).astype(jnp.float32)
+    log_a = -RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    scale = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, scale * i
+
+
+def _causal_conv(x, w, state=None):
+    K = w.shape[0]
+    pad = jnp.zeros_like(x[:, : K - 1]) if state is None \
+        else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else jnp.zeros_like(x[:, :0])
+    return y, new_state
+
+
+def apply_rglru(p, cfg, x: jax.Array) -> jax.Array:
+    """Full-sequence Griffin recurrent block. x: (B, T, d)."""
+    dt = x.dtype
+    ga = jax.nn.gelu(x @ p["w_gelu"].astype(dt), approximate=True)
+    xb = x @ p["w_rec"].astype(dt)
+    xb, _ = _causal_conv(xb, p["conv"])
+    a, beta = _gates(p, xb)                        # (B, T, w) f32
+    b = beta * xb.astype(jnp.float32)
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (ga.astype(jnp.float32) * h).astype(dt)
+    return y @ p["w_out"].astype(dt)
+
+
+def init_rglru_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    w = _width(cfg)
+    K = cfg.rglru_conv_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, w), dtype)}
+
+
+def rglru_cache_logical_axes(cfg) -> dict:
+    return {"h": ("cache_batch", "rnn_width"),
+            "conv": ("cache_batch", None, "rnn_width")}
+
+
+def decode_rglru(p, cfg, x, cache):
+    """x: (B, 1, d) -> (y, new_cache). O(1) state update."""
+    dt = x.dtype
+    ga = jax.nn.gelu(x @ p["w_gelu"].astype(dt), approximate=True)
+    xb = x @ p["w_rec"].astype(dt)
+    xb, conv_state = _causal_conv(xb, p["conv"], cache["conv"])
+    a, beta = _gates(p, xb)                        # (B, 1, w)
+    h = a[:, 0] * cache["h"] + beta[:, 0] * xb[:, 0].astype(jnp.float32)
+    y = (ga[:, 0].astype(jnp.float32) * h).astype(dt)[:, None]
+    return y @ p["w_out"].astype(dt), \
+        {"h": h, "conv": conv_state.astype(cache["conv"].dtype)}

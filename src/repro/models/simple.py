@@ -1,0 +1,100 @@
+"""Simulation-mode models (paper Sec. IV-A).
+
+* ``svm``: regularized (squared-hinge) multiclass SVM — mu-strongly
+  convex + beta-smooth, the regime of Assumption 1 / Theorem 2.
+* ``nn``: one-hidden-layer fully-connected network (paper: 7840 neurons;
+  configurable — benches default to a smaller width on CPU, noted in
+  EXPERIMENTS.md).
+
+Interface: ``init(key) -> params``, ``loss(params, x, y) -> scalar``,
+``accuracy(params, x, y)``. Params are pytrees; devices stack them on a
+leading axis and the TT-HF engine vmaps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SimModel:
+    init: Callable
+    loss: Callable          # (params, x, y) -> scalar
+    predict: Callable       # (params, x) -> (B, C) scores
+    reg: float
+    name: str
+
+    def accuracy(self, params, x, y) -> jax.Array:
+        pred = jnp.argmax(self.predict(params, x), axis=-1)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+
+def svm(dim: int, num_classes: int, reg: float = 0.1) -> SimModel:
+    """Multiclass squared-hinge SVM with L2 regularization.
+
+    loss = (1/B) sum_b sum_{c != y_b} max(0, 1 + s_c - s_y)^2 / C
+           + (reg/2) ||W||^2
+    Strongly convex with mu = reg; smooth (squared hinge is C^1 with
+    Lipschitz gradient).
+    """
+    def init(key):
+        kw, _ = jax.random.split(key)
+        w = jax.random.normal(kw, (dim, num_classes)) * 0.01
+        b = jnp.zeros((num_classes,))
+        return {"w": w, "b": b}
+
+    def predict(params, x):
+        return x @ params["w"] + params["b"]
+
+    def loss(params, x, y):
+        s = predict(params, x)                      # (B, C)
+        sy = jnp.take_along_axis(s, y[:, None], axis=1)  # (B, 1)
+        margins = jnp.maximum(0.0, 1.0 + s - sy)
+        margins = margins * (1 - jax.nn.one_hot(y, s.shape[-1]))
+        data = jnp.mean(jnp.sum(margins ** 2, axis=-1)) / s.shape[-1]
+        l2 = 0.5 * reg * (jnp.sum(params["w"] ** 2)
+                          + jnp.sum(params["b"] ** 2))
+        return data + l2
+
+    return SimModel(init, loss, predict, reg, "svm")
+
+
+def nn(dim: int, num_classes: int, hidden: int = 7840,
+       reg: float = 1e-4) -> SimModel:
+    """One-hidden-layer fully-connected net (paper: 7840 neurons)."""
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": jax.random.normal(k1, (dim, hidden)) * jnp.sqrt(2.0 / dim),
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, num_classes))
+                  * jnp.sqrt(1.0 / hidden),
+            "b2": jnp.zeros((num_classes,)),
+        }
+
+    def predict(params, x):
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+
+    def loss(params, x, y):
+        logits = predict(params, x)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+        l2 = 0.5 * reg * sum(jnp.sum(p ** 2) for p in
+                             (params["w1"], params["w2"]))
+        return nll + l2
+
+    return SimModel(init, predict=predict, loss=loss, reg=reg, name="nn")
+
+
+def make_sim_model(name: str, dim: int, num_classes: int,
+                   hidden: int = 7840) -> SimModel:
+    if name == "svm":
+        return svm(dim, num_classes)
+    if name == "nn":
+        return nn(dim, num_classes, hidden)
+    raise ValueError(f"unknown sim model {name!r}")

@@ -1,0 +1,331 @@
+"""Transformer stacks for every assigned architecture family.
+
+Design notes
+------------
+* **Scan over layers.** Per-layer parameters are stacked on a leading
+  ``layers`` axis and the stack runs under ``jax.lax.scan`` — compact
+  HLO (one layer body) so the 48-layer/512-device dry-runs compile
+  quickly, and the standard structure for activation rematerialization.
+* **Heterogeneous stacks** (llama4's interleaved MoE, RecurrentGemma's
+  2-recurrent:1-attention pattern) scan over *groups* — the smallest
+  repeating unit — so no parameter space is wasted on union layouts.
+* **Caches** are pytrees with the same leading ``layers``/``groups``
+  axis, threaded through the scan during decode.
+
+Every init function returns `Px(value, logical_axes)` leaves; the
+registry splits them (`split_tree`) and captures the axes tree during an
+`eval_shape` trace, so abstract init never allocates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlpm
+from repro.models import moe as moem
+from repro.models import rglru as rgm
+from repro.models import ssm as ssmm
+from repro.models.common import (
+    Px, apply_norm, embed_init, norm_init, softmax_cross_entropy,
+    sinusoidal_positions, split_tree,
+)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def init_dense_layer(key, cfg, *, use_moe: bool = False,
+                     cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln_attn": norm_init(ks[0], cfg, cfg.d_model),
+        "attn": attn.init_attention(ks[0], cfg),
+        "ln_mlp": norm_init(ks[1], cfg, cfg.d_model),
+    }
+    p["moe" if use_moe else "mlp"] = (
+        moem.init_moe(ks[1], cfg) if use_moe else mlpm.init_mlp(ks[1], cfg))
+    if cross:
+        p["ln_cross"] = norm_init(ks[2], cfg, cfg.d_model)
+        p["cross"] = attn.init_attention(ks[3], cfg, cross=True)
+    return p
+
+
+def apply_dense_layer(p, cfg, x, *, mode="causal", window=0,
+                      prefix_len=None, enc_out=None, positions=None):
+    from repro.dist.sharding import hint
+    x = hint(x, ("pod", "data"), None, None)   # batch stays data-sharded
+    h = apply_norm(cfg, p["ln_attn"], x)
+    h = attn.attention_block(p["attn"], cfg, h, mode=mode, window=window,
+                             prefix_len=prefix_len, positions=positions)
+    x = x + h
+    aux = None
+    if "cross" in p:
+        h = apply_norm(cfg, p["ln_cross"], x)
+        h = attn.attention_block(p["cross"], cfg, h, mode="full",
+                                 kv_source=enc_out)
+        x = x + h
+    h = apply_norm(cfg, p["ln_mlp"], x)
+    if "moe" in p:
+        h, aux = moem.apply_moe(p["moe"], cfg, h)
+    else:
+        h = mlpm.apply_mlp(p["mlp"], cfg, h)
+    return x + h, aux
+
+
+def init_ssm_layer(key, cfg) -> dict:
+    return {"ln": norm_init(key, cfg, cfg.d_model),
+            "ssm": ssmm.init_ssm(key, cfg)}
+
+
+def apply_ssm_layer(p, cfg, x, use_pallas=False):
+    from repro.dist.sharding import hint
+    x = hint(x, ("pod", "data"), None, None)
+    return x + ssmm.apply_ssm(p["ssm"], cfg,
+                              apply_norm(cfg, p["ln"], x),
+                              use_pallas=use_pallas)
+
+
+def init_rec_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"ln_rec": norm_init(ks[0], cfg, cfg.d_model),
+            "rec": rgm.init_rglru(ks[0], cfg),
+            "ln_mlp": norm_init(ks[1], cfg, cfg.d_model),
+            "mlp": mlpm.init_mlp(ks[1], cfg)}
+
+
+def apply_rec_layer(p, cfg, x):
+    from repro.dist.sharding import hint
+    x = hint(x, ("pod", "data"), None, None)
+    x = x + rgm.apply_rglru(p["rec"], cfg, apply_norm(cfg, p["ln_rec"], x))
+    return x + mlpm.apply_mlp(p["mlp"], cfg, apply_norm(cfg, p["ln_mlp"], x))
+
+
+# ---------------------------------------------------------------------------
+# stack init
+# ---------------------------------------------------------------------------
+
+def _stack(init_one: Callable, key, n: int):
+    """vmap-stack n layer inits; Px axes handled by a capture trick:
+    we init one layer for the axes structure (under eval_shape upstream
+    this never materializes), and vmap the value-only init for params."""
+    keys = jax.random.split(key, n)
+    template = init_one(keys[0])
+    _, axes = split_tree(template)
+
+    def values_only(k):
+        params, _ = split_tree(init_one(k))
+        return params
+
+    stacked = jax.vmap(values_only)(keys)
+    axes = jax.tree.map(lambda a: ("layers",) + tuple(a), axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(lambda v, a: Px(v, a), stacked, axes,
+                        is_leaf=lambda x: not isinstance(x, (dict,)))
+
+
+def _scan_layers(body: Callable, x, stacked_params, remat: bool,
+                 with_aux: bool = False):
+    """Run ``body(layer_params, x) -> (x, aux)`` over the layer stack."""
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, lp):
+        y, aux = fn(lp, carry)
+        return y, aux
+
+    x, auxs = jax.lax.scan(step, x, stacked_params)
+    return (x, auxs) if with_aux else (x, None)
+
+
+# ---------------------------------------------------------------------------
+# the model: init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg, dtype=jnp.float32) -> dict:
+    """Full parameter tree (Px leaves) for any arch kind."""
+    ks = jax.random.split(key, 8)
+    V = cfg.padded_vocab
+    # embedding d_model dim deliberately NOT fsdp-sharded: vocab/model
+    # sharding already divides it 16x, and a data-sharded d dim makes
+    # GSPMD all-gather activations instead of weights.
+    p: dict[str, Any] = {
+        "embed": embed_init(ks[0], V, cfg.d_model, ("vocab", "embed_nomodel")),
+        "ln_final": norm_init(ks[1], cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(ks[2], V, cfg.d_model,
+                                  ("vocab", "embed_nomodel"))
+
+    kind = cfg.kind
+    if kind in ("dense", "vlm"):
+        p["layers"] = _stack(lambda k: init_dense_layer(k, cfg),
+                             ks[3], cfg.num_layers)
+    elif kind == "moe":
+        if cfg.moe_every == 1:
+            p["layers"] = _stack(
+                lambda k: init_dense_layer(k, cfg, use_moe=True),
+                ks[3], cfg.num_layers)
+        else:
+            n_groups = cfg.num_layers // cfg.moe_every
+            def group(k):
+                kk = jax.random.split(k, cfg.moe_every)
+                g = {f"dense_{i}": init_dense_layer(kk[i], cfg)
+                     for i in range(cfg.moe_every - 1)}
+                g["moe"] = init_dense_layer(kk[-1], cfg, use_moe=True)
+                return g
+            p["groups"] = _stack(group, ks[3], n_groups)
+    elif kind == "ssm":
+        p["layers"] = _stack(lambda k: init_ssm_layer(k, cfg),
+                             ks[3], cfg.num_layers)
+    elif kind == "hybrid":
+        period = cfg.local_attn_every or 3
+        n_groups = cfg.num_layers // period
+        rem = cfg.num_layers - n_groups * period
+
+        def group(k):
+            kk = jax.random.split(k, period)
+            g = {f"rec_{i}": init_rec_layer(kk[i], cfg)
+                 for i in range(period - 1)}
+            g["attn"] = init_dense_layer(kk[-1], cfg)
+            return g
+        if n_groups:
+            p["groups"] = _stack(group, ks[3], n_groups)
+        if rem:
+            p["tail"] = _stack(lambda k: init_rec_layer(k, cfg), ks[4], rem)
+    elif kind in ("encdec", "audio"):
+        p["enc_layers"] = _stack(lambda k: init_dense_layer(k, cfg),
+                                 ks[3], cfg.enc_num_layers)
+        p["enc_ln_final"] = norm_init(ks[5], cfg, cfg.d_model)
+        p["layers"] = _stack(
+            lambda k: init_dense_layer(k, cfg, cross=True),
+            ks[4], cfg.num_layers)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(p, cfg, tokens, dtype):
+    from repro.dist.sharding import hint
+    x = jnp.take(p["embed"].astype(dtype), tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    return hint(x, ("pod", "data"), None, None)
+
+
+def _unembed(p, cfg, x):
+    from repro.dist.sharding import hint
+    w = p["unembed"] if "unembed" in p else p["embed"]
+    logits = jnp.einsum("btd,vd->btv", x, w.astype(x.dtype))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    # keep the vocab dim model-sharded through the loss — materializing
+    # replicated (B, T, V) logits is a multi-GB/device temp
+    return hint(logits, ("pod", "data"), None, "model")
+
+
+def forward(p, cfg, batch, *, dtype=jnp.bfloat16, remat: bool = True,
+            use_pallas: bool = False):
+    """Full-sequence forward -> (logits, aux_losses).
+
+    batch: {"tokens": (B, T) int32, and per-frontend extras:
+            "patches": (B, enc_seq, d) for vlm (stub vision output)
+            "frames":  (B, enc_seq, d) for audio (stub codec output)}
+    """
+    kind = cfg.kind
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = _embed_tokens(p, cfg, tokens, dtype)
+    mode, window, prefix_len = "causal", 0, None
+    if cfg.sliding_window:
+        mode, window = "sliding", cfg.sliding_window
+
+    if kind == "vlm":
+        # prefix-LM over [patch embeds | text]
+        patches = batch["patches"].astype(dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        mode, prefix_len = "prefix", cfg.enc_seq_len
+
+    enc_out = None
+    if kind in ("encdec", "audio"):
+        frames = batch["frames"].astype(dtype)
+        pos = sinusoidal_positions(frames.shape[1], cfg.d_model).astype(dtype)
+        h = frames + pos[None]
+        def enc_body(lp, hh):
+            y, _ = apply_dense_layer(lp, cfg, hh, mode="full")
+            return y, None
+        h, _ = _scan_layers(enc_body, h, p["enc_layers"], remat)
+        enc_out = apply_norm(cfg, p["enc_ln_final"], h)
+        if not cfg.rope:
+            dpos = sinusoidal_positions(T, cfg.d_model).astype(dtype)
+            x = x + dpos[None]
+
+    aux = None
+    if kind in ("dense", "vlm") or (kind == "moe" and cfg.moe_every == 1):
+        def body(lp, xx):
+            return apply_dense_layer(lp, cfg, xx, mode=mode, window=window,
+                                     prefix_len=prefix_len)
+        x, aux = _scan_layers(body, x, p["layers"], remat, with_aux=True)
+    elif kind == "moe":
+        def body(lp, xx):
+            for i in range(cfg.moe_every - 1):
+                xx, _ = apply_dense_layer(lp[f"dense_{i}"], cfg, xx,
+                                          mode=mode, window=window)
+            xx, a = apply_dense_layer(lp["moe"], cfg, xx, mode=mode,
+                                      window=window)
+            return xx, a
+        x, aux = _scan_layers(body, x, p["groups"], remat, with_aux=True)
+    elif kind == "ssm":
+        def body(lp, xx):
+            return apply_ssm_layer(lp, cfg, xx, use_pallas=use_pallas), None
+        x, _ = _scan_layers(body, x, p["layers"], remat)
+    elif kind == "hybrid":
+        period = cfg.local_attn_every or 3
+        def body(lp, xx):
+            for i in range(period - 1):
+                xx = apply_rec_layer(lp[f"rec_{i}"], cfg, xx)
+            xx, _ = apply_dense_layer(lp["attn"], cfg, xx, mode="sliding",
+                                      window=cfg.attention_window)
+            return xx, None
+        if "groups" in p:
+            x, _ = _scan_layers(body, x, p["groups"], remat)
+        if "tail" in p:
+            def tail_body(lp, xx):
+                return apply_rec_layer(lp, cfg, xx), None
+            x, _ = _scan_layers(tail_body, x, p["tail"], remat)
+    elif kind in ("encdec", "audio"):
+        def body(lp, xx):
+            return apply_dense_layer(lp, cfg, xx, mode="causal",
+                                     enc_out=enc_out)
+        x, _ = _scan_layers(body, x, p["layers"], remat)
+    else:
+        raise ValueError(kind)
+
+    x = apply_norm(cfg, p["ln_final"], x)
+    if kind == "vlm":
+        x = x[:, cfg.enc_seq_len:]          # predict text positions only
+    logits = _unembed(p, cfg, x)
+    aux_losses = {}
+    if aux is not None and isinstance(aux, dict) and "load_balance" in aux:
+        aux_losses["load_balance"] = jnp.mean(aux["load_balance"])
+        aux_losses["router_z"] = jnp.mean(aux["router_z"])
+    return logits, aux_losses
+
+
+def loss_fn(p, cfg, batch, *, dtype=jnp.bfloat16, remat=True,
+            use_pallas=False):
+    logits, aux = forward(p, cfg, batch, dtype=dtype, remat=remat,
+                          use_pallas=use_pallas)
+    loss = softmax_cross_entropy(logits, batch["labels"])
+    if "load_balance" in aux:
+        loss = loss + cfg.moe_aux_loss_weight * aux["load_balance"] \
+            + 1e-3 * aux["router_z"]
+    return loss

@@ -1,0 +1,110 @@
+"""Minimal pure-JAX optimizers (optax is not available offline).
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params, lr) -> (updates, state)`` where
+``updates`` are to be *added* to params. ``lr`` is passed per call so the
+paper's decaying schedule stays outside the optimizer state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]
+    name: str = "opt"
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd(weight_decay: float = 0.0) -> Optimizer:
+    """Plain SGD — the paper's optimizer (eq. 9)."""
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        def u(g, p):
+            g = g.astype(p.dtype)
+            if weight_decay:
+                g = g + jnp.asarray(weight_decay, p.dtype) * p
+            # lr cast to param dtype: an f32 scalar would promote the
+            # whole product to f32 (a full-param-sized temp)
+            return jnp.asarray(-lr, p.dtype) * g
+        return jax.tree.map(u, grads, params), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(beta: float = 0.9, weight_decay: float = 0.0,
+             nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like_tree(params)}
+
+    def update(grads, state, params, lr):
+        def step(g, m, p):
+            g = g + weight_decay * p if weight_decay else g
+            m_new = beta * m + g
+            d = g + beta * m_new if nesterov else m_new
+            return (-lr * d).astype(p.dtype), m_new
+        flat = jax.tree.map(step, grads, state["m"], params)
+        updates = jax.tree.map(lambda x: x[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda x: x[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m}
+
+    return Optimizer(init, update, "momentum")
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like_tree(params),
+                "v": _zeros_like_tree(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def step(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * (g32 * g32)
+            upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (-lr * upd).astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(step, grads, state["m"], state["v"], params)
+        is3 = lambda x: isinstance(x, tuple)
+        updates = jax.tree.map(lambda x: x[0], flat, is_leaf=is3)
+        m = jax.tree.map(lambda x: x[1], flat, is_leaf=is3)
+        v = jax.tree.map(lambda x: x[2], flat, is_leaf=is3)
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update, "adamw")
+
+
+def make_optimizer(name: str, *, momentum_beta: float = 0.9,
+                   weight_decay: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(weight_decay)
+    if name == "momentum":
+        return momentum(momentum_beta, weight_decay)
+    if name == "adamw":
+        return adamw(weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

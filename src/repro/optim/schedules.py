@@ -1,0 +1,36 @@
+"""Step-size schedules. ``paper_schedule`` is the paper's
+eta_t = gamma / (t + alpha) (Theorem 2), validated by
+``core.theory.check_theorem2_conditions``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paper_schedule(gamma: float, alpha: float):
+    """eta_t = gamma / (t + alpha)  (Proposition 1 / Theorem 2)."""
+    def eta(t):
+        return gamma / (jnp.asarray(t, jnp.float32) + alpha)
+    return eta
+
+
+def constant(lr: float):
+    def eta(t):
+        return jnp.full((), lr, jnp.float32)
+    return eta
+
+
+def cosine(peak: float, total_steps: int, floor: float = 0.0):
+    def eta(t):
+        frac = jnp.clip(jnp.asarray(t, jnp.float32) / total_steps, 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return eta
+
+
+def warmup_cosine(peak: float, warmup: int, total_steps: int,
+                  floor: float = 0.0):
+    cos = cosine(peak, max(total_steps - warmup, 1), floor)
+    def eta(t):
+        t = jnp.asarray(t, jnp.float32)
+        w = peak * t / jnp.maximum(warmup, 1)
+        return jnp.where(t < warmup, w, cos(t - warmup))
+    return eta

@@ -1,0 +1,6 @@
+from repro.serving.engine import (
+    init_cache_tree, cache_logical_axes_tree, prefill, decode_step,
+)
+
+__all__ = ["init_cache_tree", "cache_logical_axes_tree", "prefill",
+           "decode_step"]

@@ -1,0 +1,524 @@
+"""Serving runtime: KV/state caches, prefill, and single-token decode
+for every arch family.
+
+Cache layout: one pytree per model whose leaves carry a leading
+``layers`` (or ``groups``) axis, threaded through ``lax.scan`` together
+with the layer parameters — the decode step is a single compact HLO
+program regardless of depth.
+
+Sliding-window archs (and the *sliding-window serving variant* used for
+``long_500k`` on full-attention archs) keep a **ring buffer** of
+``window`` positions: slot = pos % window, keys stored post-RoPE
+(dot-product relative property keeps scores exact). SSM / RG-LRU archs
+carry O(1) recurrent state — no KV growth at all.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlpm
+from repro.models import moe as moem
+from repro.models import rglru as rgm
+from repro.models import ssm as ssmm
+from repro.models.common import apply_norm, sinusoidal_positions
+from repro.models.transformer import _embed_tokens, _unembed
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def _attn_cache(cfg, batch, S, dtype):
+    return attn.init_cache(cfg, batch, S, dtype)
+
+
+def effective_window(cfg, serve_window: int = 0) -> int:
+    """The serving attention window: the arch's own sliding window, the
+    hybrid local-attention window, or a serving-variant override."""
+    if cfg.kind == "hybrid":
+        return cfg.attention_window
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    return serve_window
+
+
+def cache_len_for(cfg, seq_len: int, serve_window: int = 0) -> int:
+    w = effective_window(cfg, serve_window)
+    return min(seq_len, w) if w else seq_len
+
+
+def init_cache_tree(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16,
+                    serve_window: int = 0):
+    """Cache pytree for the whole model (all layers stacked)."""
+    kind = cfg.kind
+    S = cache_len_for(cfg, seq_len, serve_window)
+
+    def stack(make_one, n):
+        one = make_one()
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), one)
+
+    if kind in ("dense", "vlm") or (kind == "moe" and cfg.moe_every == 1):
+        return {"layers": stack(lambda: _attn_cache(cfg, batch, S, dtype),
+                                cfg.num_layers)}
+    if kind == "moe":
+        n_groups = cfg.num_layers // cfg.moe_every
+        def group():
+            g = {f"dense_{i}": _attn_cache(cfg, batch, S, dtype)
+                 for i in range(cfg.moe_every - 1)}
+            g["moe"] = _attn_cache(cfg, batch, S, dtype)
+            return g
+        return {"groups": stack(group, n_groups)}
+    if kind == "ssm":
+        return {"layers": stack(
+            lambda: ssmm.init_ssm_cache(cfg, batch, dtype), cfg.num_layers)}
+    if kind == "hybrid":
+        period = cfg.local_attn_every or 3
+        n_groups = cfg.num_layers // period
+        rem = cfg.num_layers - n_groups * period
+        def group():
+            g = {f"rec_{i}": rgm.init_rglru_cache(cfg, batch, dtype)
+                 for i in range(period - 1)}
+            g["attn"] = _attn_cache(cfg, batch, S, dtype)
+            return g
+        out = {}
+        if n_groups:
+            out["groups"] = stack(group, n_groups)
+        if rem:
+            out["tail"] = stack(
+                lambda: rgm.init_rglru_cache(cfg, batch, dtype), rem)
+        return out
+    if kind in ("encdec", "audio"):
+        def dec_layer():
+            c = _attn_cache(cfg, batch, S, dtype)
+            K, hd = cfg.num_kv_heads, cfg.head_dim
+            c["cross_k"] = jnp.zeros((batch, cfg.enc_seq_len, K, hd), dtype)
+            c["cross_v"] = jnp.zeros((batch, cfg.enc_seq_len, K, hd), dtype)
+            return c
+        return {"layers": stack(dec_layer, cfg.num_layers)}
+    raise ValueError(kind)
+
+
+def cache_logical_axes_tree(cfg, long_context: bool = False):
+    """Logical axes matching init_cache_tree's structure."""
+    kv = ("layers",) + attn.cache_logical_axes()["k"]
+    kv_leaf = {"k": kv, "v": kv}
+
+    def with_layers(d):
+        return jax.tree.map(lambda a: ("layers",) + tuple(a), d,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    kind = cfg.kind
+    if kind in ("dense", "vlm") or (kind == "moe" and cfg.moe_every == 1):
+        return {"layers": with_layers(attn.cache_logical_axes())}
+    if kind == "moe":
+        g = {f"dense_{i}": attn.cache_logical_axes()
+             for i in range(cfg.moe_every - 1)}
+        g["moe"] = attn.cache_logical_axes()
+        return {"groups": with_layers(g)}
+    if kind == "ssm":
+        return {"layers": with_layers(ssmm.ssm_cache_logical_axes(cfg))}
+    if kind == "hybrid":
+        period = cfg.local_attn_every or 3
+        rem = cfg.num_layers - (cfg.num_layers // period) * period
+        g = {f"rec_{i}": rgm.rglru_cache_logical_axes(cfg)
+             for i in range(period - 1)}
+        g["attn"] = attn.cache_logical_axes()
+        out = {}
+        if (cfg.num_layers // period):
+            out["groups"] = with_layers(g)
+        if rem:
+            out["tail"] = with_layers(rgm.rglru_cache_logical_axes(cfg))
+        return out
+    if kind in ("encdec", "audio"):
+        d = attn.cache_logical_axes()
+        d["cross_k"] = ("cache_batch", None, "cache_kv_heads", "head_dim")
+        d["cross_v"] = ("cache_batch", None, "cache_kv_heads", "head_dim")
+        return {"layers": with_layers(d)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _ring_fill(k_all, v_all, S, dtype):
+    """Place the last S tokens of (B, T, K, hd) into ring slots t % S."""
+    T = k_all.shape[1]
+    if T <= S:
+        pad = S - T
+        k = jnp.pad(k_all, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v_all, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return k.astype(dtype), v.astype(dtype)
+    idx = T - S + jnp.arange(S)
+    slots = idx % S
+    k = jnp.zeros((k_all.shape[0], S) + k_all.shape[2:], dtype)
+    v = jnp.zeros_like(k)
+    k = k.at[:, slots].set(k_all[:, idx].astype(dtype))
+    v = v.at[:, slots].set(v_all[:, idx].astype(dtype))
+    return k, v
+
+
+def _prefill_attn_layer(lp, cfg, x, *, mode, window, S, cache_dtype,
+                        enc_out=None, prefix_len=None):
+    """Dense-family layer forward that also emits its KV cache slice."""
+    from repro.models.common import rope as rope_fn
+    B, T, _ = x.shape
+    h = apply_norm(cfg, lp["ln_attn"], x)
+    # projections (duplicated from attention_block to capture K/V)
+    from repro.dist.sharding import hint
+    q = attn._project_q(lp["attn"], cfg, h)
+    k, v = attn._project_kv(lp["attn"], cfg, h)
+    q = hint(q, ("pod", "data"), None, "model", None, None)
+    k = hint(k, ("pod", "data"), None, "model", None)
+    v = hint(v, ("pod", "data"), None, "model", None)
+    if cfg.rope:
+        pos = jnp.arange(T)
+        q = rope_fn(q.reshape(B, T, -1, cfg.head_dim), pos,
+                    cfg.rope_theta).reshape(q.shape)
+        k = rope_fn(k, pos, cfg.rope_theta)
+    # pin the flash inputs AFTER rope: otherwise the cache output's
+    # seq-sharding propagates backwards and every flash q-step
+    # all-gathers the whole K/V (HC2 in EXPERIMENTS.md §Perf)
+    q = hint(q, ("pod", "data"), None, "model", None, None)
+    k = hint(k, ("pod", "data"), None, "model", None)
+    v = hint(v, ("pod", "data"), None, "model", None)
+    use_flash = T > 2048
+    if use_flash:
+        pair_mode = attn.PAIR_SCHEDULE and mode in ("causal", "sliding",
+                                                    "prefix")
+        qc = min(512, T)
+        kc = qc if pair_mode else min(1024, T)
+        pq, pk = (-T) % qc, (-T) % kc
+        qq = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0))) if pq else q
+        kk = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+        vv = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+        fa = attn.flash_attention_pairs if pair_mode else attn.flash_attention
+        out = fa(qq, kk, vv, mode=mode, window=window,
+                 prefix_len=prefix_len, q_chunk=qc,
+                 k_chunk=kc, k_len=T if pk else None)[:, :T]
+    else:
+        out = attn.simple_attention(q, k, v, mode=mode, window=window,
+                                    prefix_len=prefix_len)
+    out = out.reshape(B, T, cfg.num_heads * cfg.head_dim)
+    x = x + out @ lp["attn"]["wo"].astype(x.dtype)
+
+    if enc_out is not None and "cross" in lp:
+        h = apply_norm(cfg, lp["ln_cross"], x)
+        h = attn.attention_block(lp["cross"], cfg, h, mode="full",
+                                 kv_source=enc_out)
+        x = x + h
+
+    h = apply_norm(cfg, lp["ln_mlp"], x)
+    if "moe" in lp:
+        h, _ = moem.apply_moe(lp["moe"], cfg, h)
+    else:
+        h = mlpm.apply_mlp(lp["mlp"], cfg, h)
+    x = x + h
+
+    ck, cv = _ring_fill(k, v, S, cache_dtype)
+    cache = {"k": ck, "v": cv}
+    if enc_out is not None and "cross" in lp:
+        ek, ev = attn._project_kv(lp["cross"], cfg, enc_out)
+        cache["cross_k"] = ek.astype(cache_dtype)
+        cache["cross_v"] = ev.astype(cache_dtype)
+    return x, cache
+
+
+def _prefill_ssm_layer(lp, cfg, x):
+    h = apply_norm(cfg, lp["ln"], x)
+    b, T, d = h.shape
+    d_in, H, P, S = ssmm._dims(cfg)
+    proj = h @ lp["ssm"]["w_in"].astype(h.dtype)
+    z, xs, Bm, Cm, dt_raw = ssmm._split_proj(cfg, proj)
+    xs, cx = ssmm._causal_conv(xs, lp["ssm"]["conv_x"])
+    Bm, cB = ssmm._causal_conv(Bm, lp["ssm"]["conv_B"])
+    Cm, cC = ssmm._causal_conv(Cm, lp["ssm"]["conv_C"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["ssm"]["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["ssm"]["A_log"].astype(jnp.float32))
+    y, h_fin = ssmm.ssd_chunked(xs.reshape(b, T, H, P), dt, dt * A, Bm, Cm,
+                                chunk=cfg.ssm_chunk)
+    y = y + xs.reshape(b, T, H, P) * lp["ssm"]["D"].astype(
+        h.dtype)[None, None, :, None]
+    y = y.reshape(b, T, d_in) * jax.nn.silu(z)
+    x = x + y @ lp["ssm"]["w_out"].astype(h.dtype)
+    # conv caches hold the last (K-1) *pre-activation* inputs
+    cache = {"h": h_fin, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    return x, cache
+
+
+def _prefill_rec_layer(lp, cfg, x):
+    dt = x.dtype
+    h = apply_norm(cfg, lp["ln_rec"], x)
+    ga = jax.nn.gelu(h @ lp["rec"]["w_gelu"].astype(dt), approximate=True)
+    xb = h @ lp["rec"]["w_rec"].astype(dt)
+    xb, conv_state = rgm._causal_conv(xb, lp["rec"]["conv"])
+    a, beta = rgm._gates(lp["rec"], xb)
+    b = beta * xb.astype(jnp.float32)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (ga.astype(jnp.float32) * hs).astype(dt)
+    x = x + y @ lp["rec"]["w_out"].astype(dt)
+    x = x + mlpm.apply_mlp(lp["mlp"], cfg,
+                           apply_norm(cfg, lp["ln_mlp"], x))
+    cache = {"h": hs[:, -1], "conv": conv_state}
+    return x, cache
+
+
+def prefill(p, cfg, batch, *, dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+            serve_window: int = 0, remat: bool = True,
+            cache_len: int | None = None):
+    """Process the full prompt; return (last-token logits, cache, pos).
+
+    batch: {"tokens": (B, T)} + frontend extras (patches/frames).
+    ``cache_len``: total cache capacity to allocate (>= prompt length;
+    defaults to the prompt length — pass the generation horizon).
+    """
+    kind = cfg.kind
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = _embed_tokens(p, cfg, tokens, dtype)
+    mode, window = "causal", 0
+    if cfg.sliding_window:
+        mode, window = "sliding", cfg.sliding_window
+    elif serve_window and kind not in ("ssm", "hybrid"):
+        mode, window = "sliding", serve_window
+
+    prefix = None
+    enc_out = None
+    if kind == "vlm":
+        patches = batch["patches"].astype(dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        mode = "prefix"
+        prefix = cfg.enc_seq_len
+    if kind in ("encdec", "audio"):
+        frames = batch["frames"].astype(dtype)
+        pos_e = sinusoidal_positions(frames.shape[1],
+                                     cfg.d_model).astype(dtype)
+        h = frames + pos_e[None]
+        def enc_body(hh, lp):
+            y = attn.attention_block(lp["attn"], cfg,
+                                     apply_norm(cfg, lp["ln_attn"], hh),
+                                     mode="full")
+            hh = hh + y
+            hh = hh + mlpm.apply_mlp(lp["mlp"], cfg,
+                                     apply_norm(cfg, lp["ln_mlp"], hh))
+            return hh, None
+        h, _ = jax.lax.scan(lambda c, lp: enc_body(c, lp), h, p["enc_layers"])
+        enc_out = apply_norm(cfg, p["enc_ln_final"], h)
+        if not cfg.rope:
+            dpos = sinusoidal_positions(T, cfg.d_model).astype(dtype)
+            x = x + dpos[None]
+
+    S = cache_len_for(cfg, max(cache_len or 0, x.shape[1]), serve_window)
+
+    def run_stack(x, stacked, body):
+        fn = jax.checkpoint(body) if remat else body
+        return jax.lax.scan(lambda c, lp: fn(lp, c), x, stacked)
+
+    if kind in ("dense", "vlm") or (kind == "moe" and cfg.moe_every == 1):
+        def body(lp, xx):
+            m = "prefix" if kind == "vlm" else mode
+            return _prefill_attn_layer(
+                lp, cfg, xx, mode=m, window=window, S=S,
+                cache_dtype=cache_dtype)
+        # prefix mode needs prefix_len plumbed through _mask_block;
+        # handled via functools.partial on _mask defaults:
+        if kind == "vlm":
+            def body(lp, xx):  # noqa: F811 — vlm specialization
+                return _prefill_vlm_layer(lp, cfg, xx, prefix, S, cache_dtype)
+        x, cache = run_stack(x, p["layers"], body)
+        cache = {"layers": cache}
+    elif kind == "moe":
+        def body(lp, xx):
+            caches = {}
+            for i in range(cfg.moe_every - 1):
+                xx, caches[f"dense_{i}"] = _prefill_attn_layer(
+                    lp[f"dense_{i}"], cfg, xx, mode=mode, window=window,
+                    S=S, cache_dtype=cache_dtype)
+            xx, caches["moe"] = _prefill_attn_layer(
+                lp["moe"], cfg, xx, mode=mode, window=window, S=S,
+                cache_dtype=cache_dtype)
+            return xx, caches
+        x, cache = run_stack(x, p["groups"], body)
+        cache = {"groups": cache}
+    elif kind == "ssm":
+        def body(lp, xx):
+            return _prefill_ssm_layer(lp, cfg, xx)
+        x, cache = run_stack(x, p["layers"], body)
+        cache = {"layers": cache}
+    elif kind == "hybrid":
+        period = cfg.local_attn_every or 3
+        def body(lp, xx):
+            caches = {}
+            for i in range(period - 1):
+                xx, caches[f"rec_{i}"] = _prefill_rec_layer(
+                    lp[f"rec_{i}"], cfg, xx)
+            xx, caches["attn"] = _prefill_attn_layer(
+                lp["attn"], cfg, xx, mode="sliding",
+                window=cfg.attention_window, S=S, cache_dtype=cache_dtype)
+            return xx, caches
+        cache = {}
+        if "groups" in p:
+            x, gcache = run_stack(x, p["groups"], body)
+            cache["groups"] = gcache
+        if "tail" in p:
+            def tail_body(lp, xx):
+                return _prefill_rec_layer(lp, cfg, xx)
+            x, tail_cache = run_stack(x, p["tail"], tail_body)
+            cache["tail"] = tail_cache
+    elif kind in ("encdec", "audio"):
+        def body(lp, xx):
+            return _prefill_attn_layer(lp, cfg, xx, mode="causal", window=0,
+                                       S=S, cache_dtype=cache_dtype,
+                                       enc_out=enc_out)
+        x, cache = run_stack(x, p["layers"], body)
+        cache = {"layers": cache}
+    else:
+        raise ValueError(kind)
+
+    x = apply_norm(cfg, p["ln_final"], x)
+    logits = _unembed(p, cfg, x[:, -1:])
+    total = T + (cfg.enc_seq_len if kind == "vlm" else 0)
+    return logits, cache, jnp.asarray(total, jnp.int32)
+
+
+def _prefill_vlm_layer(lp, cfg, x, prefix, S, cache_dtype):
+    return _prefill_attn_layer(lp, cfg, x, mode="prefix", window=0, S=S,
+                               cache_dtype=cache_dtype, prefix_len=prefix)
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(p, cfg, token, cache, pos, *, dtype=jnp.bfloat16,
+                serve_window: int = 0):
+    """One-token generation step.
+
+    token: (B, 1) int32; cache: tree from init_cache_tree/prefill;
+    pos: scalar int32 absolute position. Returns (logits, new_cache).
+    """
+    kind = cfg.kind
+    x = _embed_tokens(p, cfg, token, dtype)
+    if kind in ("encdec", "audio") and not cfg.rope:
+        # sinusoidal decoder position for the current step
+        d = cfg.d_model
+        half = d // 2
+        freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half)
+                       / max(half - 1, 1))
+        ang = pos.astype(jnp.float32) * freq
+        dpos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+        x = x + dpos.astype(dtype)
+
+    w = effective_window(cfg, serve_window)
+
+    def attn_decode(lp, xx, c, *, cross=False):
+        h = apply_norm(cfg, lp["ln_attn"], xx)
+        ring = w if (c["k"].shape[1] == w and w) else 0
+        out, c_new = attn.decode_attention(lp["attn"], cfg, h,
+                                           {"k": c["k"], "v": c["v"]},
+                                           pos, window=ring)
+        xx = xx + out
+        if cross and "cross" in lp:
+            h = apply_norm(cfg, lp["ln_cross"], xx)
+            kv = {"k": c["cross_k"], "v": c["cross_v"]}
+            out, _ = attn.decode_attention(lp["cross"], cfg, h, {},
+                                           pos, kv_source_cache=kv)
+            xx = xx + out
+        h = apply_norm(cfg, lp["ln_mlp"], xx)
+        if "moe" in lp:
+            h, _ = moem.apply_moe(lp["moe"], cfg, h)
+        else:
+            h = mlpm.apply_mlp(lp["mlp"], cfg, h)
+        new = dict(c)
+        new["k"], new["v"] = c_new["k"], c_new["v"]
+        return xx + h, new
+
+    def ssm_decode(lp, xx, c):
+        h = apply_norm(cfg, lp["ln"], xx)
+        y, c_new = ssmm.decode_ssm(lp["ssm"], cfg, h, c)
+        return xx + y, c_new
+
+    def rec_decode(lp, xx, c):
+        h = apply_norm(cfg, lp["ln_rec"], xx)
+        y, c_new = rgm.decode_rglru(lp["rec"], cfg, h, c)
+        xx = xx + y
+        xx = xx + mlpm.apply_mlp(lp["mlp"], cfg,
+                                 apply_norm(cfg, lp["ln_mlp"], xx))
+        return xx, c_new
+
+    if kind in ("dense", "vlm") or (kind == "moe" and cfg.moe_every == 1):
+        def body(xx, scanned):
+            lp, c = scanned
+            return attn_decode(lp, xx, c)
+        x, new_cache = jax.lax.scan(
+            lambda c, s: body(c, s), x, (p["layers"], cache["layers"]))
+        new_cache = {"layers": new_cache}
+    elif kind == "moe":
+        def body(xx, scanned):
+            lp, c = scanned
+            new = {}
+            for i in range(cfg.moe_every - 1):
+                xx, new[f"dense_{i}"] = attn_decode(
+                    lp[f"dense_{i}"], xx, c[f"dense_{i}"])
+            xx, new["moe"] = attn_decode(lp["moe"], xx, c["moe"])
+            return xx, new
+        x, new_cache = jax.lax.scan(
+            lambda c, s: body(c, s), x, (p["groups"], cache["groups"]))
+        new_cache = {"groups": new_cache}
+    elif kind == "ssm":
+        def body(xx, scanned):
+            lp, c = scanned
+            return ssm_decode(lp, xx, c)
+        x, new_cache = jax.lax.scan(
+            lambda c, s: body(c, s), x, (p["layers"], cache["layers"]))
+        new_cache = {"layers": new_cache}
+    elif kind == "hybrid":
+        period = cfg.local_attn_every or 3
+        def body(xx, scanned):
+            lp, c = scanned
+            new = {}
+            for i in range(period - 1):
+                xx, new[f"rec_{i}"] = rec_decode(
+                    lp[f"rec_{i}"], xx, c[f"rec_{i}"])
+            xx, new["attn"] = attn_decode(lp["attn"], xx, c["attn"])
+            return xx, new
+        new_cache = {}
+        if "groups" in p:
+            x, gnew = jax.lax.scan(
+                lambda c, s: body(c, s), x, (p["groups"], cache["groups"]))
+            new_cache["groups"] = gnew
+        if "tail" in p:
+            def tail_body(xx, scanned):
+                lp, c = scanned
+                return rec_decode(lp, xx, c)
+            x, tail_new = jax.lax.scan(
+                lambda c, s: tail_body(c, s), x,
+                (p["tail"], cache["tail"]))
+            new_cache["tail"] = tail_new
+    elif kind in ("encdec", "audio"):
+        def body(xx, scanned):
+            lp, c = scanned
+            return attn_decode(lp, xx, c, cross=True)
+        x, new_cache = jax.lax.scan(
+            lambda c, s: body(c, s), x, (p["layers"], cache["layers"]))
+        new_cache = {"layers": new_cache}
+    else:
+        raise ValueError(kind)
+
+    x = apply_norm(cfg, p["ln_final"], x)
+    logits = _unembed(p, cfg, x)
+    return logits, new_cache

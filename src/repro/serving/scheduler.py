@@ -1,0 +1,143 @@
+"""Batched request scheduler: wave-based (static) batching over the
+model zoo's prefill/decode steps.
+
+Requests arrive with different prompt lengths and generation budgets;
+the scheduler packs up to `slots` of them into one fixed-shape batch
+(left-padded prompts), prefills once, and decodes the wave together,
+retiring slots as they hit their budgets; the next wave is admitted
+when the batch drains. Static shapes keep a single jit signature for
+the whole lifetime. Per-slot incremental prefill into freed slots
+(true continuous batching) is the documented upgrade path — it needs
+slot-indexed cache writes, which the ring-buffer cache layout already
+supports.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelApi
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (T,) int32
+    max_new: int = 16
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class SchedulerStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_generated: int = 0
+    requests_done: int = 0
+
+
+class BatchScheduler:
+    """Slot-based wave batching (static shapes, shared pos)."""
+
+    def __init__(self, model: ModelApi, *, slots: int = 4,
+                 max_prompt: int = 64, max_total: int = 128,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.slots = slots
+        self.max_prompt = max_prompt
+        self.max_total = max_total
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: list[Request] = []
+        self.active: list[Optional[Request]] = [None] * slots
+        self.stats = SchedulerStats()
+        self._prefill = jax.jit(lambda p, b: model.prefill(
+            p, b, dtype=jnp.float32, cache_dtype=jnp.float32,
+            cache_len=max_total))
+        self._decode = jax.jit(lambda p, t, c, s: model.decode_step(
+            p, t, c, s, dtype=jnp.float32))
+        self._cache = None
+        self._pos = None            # (slots,) per-slot absolute position
+        self._last_logits = None
+
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) <= self.max_prompt
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _admit(self, params) -> bool:
+        """Fill free slots from the queue and (re)prefill the batch.
+
+        Simplification: a joint prefill re-encodes all active prompts
+        (cheap at these sizes; per-slot incremental prefill is the
+        production upgrade path)."""
+        free = [i for i, r in enumerate(self.active) if r is None]
+        if not free or not self.queue:
+            return False
+        for i in free:
+            if not self.queue:
+                break
+            self.active[i] = self.queue.pop(0)
+        live = [r for r in self.active if r is not None]
+        if not live:
+            return False
+        # right-align prompts into a common length (left-pad with 0)
+        L = max(len(r.prompt) for r in live)
+        toks = np.zeros((self.slots, L), np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None:
+                toks[i, L - len(r.prompt):] = r.prompt
+        logits, cache, pos = self._prefill(params,
+                                           {"tokens": jnp.asarray(toks)})
+        self._cache = cache
+        self._pos = jnp.full((), int(pos), jnp.int32)
+        self._last_logits = logits
+        self.stats.prefills += 1
+        return True
+
+    def _sample(self, logits) -> jnp.ndarray:
+        if self.temperature > 0:
+            self.key, k = jax.random.split(self.key)
+            return jax.random.categorical(
+                k, logits[:, -1] / self.temperature)[:, None]
+        return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+    def step(self, params) -> int:
+        """One decode step for all live slots; returns #tokens emitted."""
+        if self._cache is None and not self._admit(params):
+            return 0
+        tok = self._sample(self._last_logits)
+        self._last_logits, self._cache = self._decode(
+            params, tok, self._cache, self._pos)
+        self._pos = self._pos + 1
+        self.stats.decode_steps += 1
+        emitted = 0
+        tok_np = np.asarray(tok)[:, 0]
+        for i, r in enumerate(self.active):
+            if r is None or r.done:
+                continue
+            r.out_tokens.append(int(tok_np[i]))
+            emitted += 1
+            if len(r.out_tokens) >= r.max_new or \
+                    int(self._pos) >= self.max_total:
+                r.done = True
+                self.stats.requests_done += 1
+                self.active[i] = None
+        self.stats.tokens_generated += emitted
+        # batch drained -> allow the next admission wave
+        if all(r is None for r in self.active):
+            self._cache = None
+        return emitted
+
+    def run(self, params, max_steps: int = 1000) -> SchedulerStats:
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            if self.step(params) == 0 and not self.queue:
+                break
+            steps += 1
+        return self.stats

@@ -1,0 +1,4 @@
+from repro.train.trainer import ScaleTrainer, TrainerConfig
+from repro.train.metrics import MetricLogger
+
+__all__ = ["ScaleTrainer", "TrainerConfig", "MetricLogger"]

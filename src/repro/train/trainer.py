@@ -1,0 +1,140 @@
+"""Scale-mode trainer: the TT-HF interval loop with evaluation,
+checkpointing, and metric logging — the production loop around
+`core.distributed.make_tthf_train_step`.
+
+Handles: data sharding per replica, interval batching
+(tau x R x b x T), periodic held-out eval of the *global* (sampled)
+model, checkpoint save/resume, and the communication ledger (uplink /
+consensus event accounting mirroring the paper's cost model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_train_state, save_train_state
+from repro.configs.base import ModelConfig
+from repro.core.distributed import (
+    TTHFScaleConfig, make_tthf_train_step, stack_replicas)
+from repro.core.energy import CommLedger
+from repro.data.tokens import synthetic_token_batches
+from repro.models import ModelApi, build_model
+from repro.train.metrics import MetricLogger
+
+
+@dataclass
+class TrainerConfig:
+    batch_per_replica: int = 4
+    seq_len: int = 256
+    intervals: int = 10
+    eval_every: int = 5
+    eval_batches: int = 2
+    ckpt_every: int = 0             # 0 = off
+    ckpt_dir: str = "checkpoints"
+    log_path: Optional[str] = None
+    dtype: str = "float32"
+    seed: int = 0
+
+
+class ScaleTrainer:
+    def __init__(self, cfg: ModelConfig, scale: TTHFScaleConfig,
+                 tcfg: TrainerConfig, sync: str = "tthf"):
+        self.cfg = cfg
+        self.scale = scale
+        self.tcfg = tcfg
+        self.model: ModelApi = build_model(cfg)
+        dtype = jnp.float32 if tcfg.dtype == "float32" else jnp.bfloat16
+        step, self.net = make_tthf_train_step(
+            self.model, scale, dtype=dtype, sync=sync)
+        self._step = jax.jit(step)
+        self._eval_loss = jax.jit(
+            lambda p, b: self.model.loss(p, b, dtype=dtype, remat=False))
+        self.ledger = CommLedger()
+        self.metrics = MetricLogger(tcfg.log_path)
+        self.key = jax.random.PRNGKey(tcfg.seed)
+        self._gens = [synthetic_token_batches(
+            tcfg.batch_per_replica, tcfg.seq_len, cfg.vocab_size,
+            seed=tcfg.seed, shard_id=r) for r in range(scale.replicas)]
+        self._eval_gen = synthetic_token_batches(
+            tcfg.batch_per_replica, tcfg.seq_len, cfg.vocab_size,
+            seed=tcfg.seed + 10_000, shard_id=99)
+        self.params = None
+        self.interval = 0
+
+    # ------------------------------------------------------------------
+    def init(self):
+        self.params = stack_replicas(
+            self.model.init(jax.random.PRNGKey(self.tcfg.seed)),
+            self.scale.replicas)
+        return self
+
+    def _interval_batch(self):
+        tau, R = self.scale.tau, self.scale.replicas
+        mbs = [[next(g) for _ in range(tau)] for g in self._gens]
+        return {k: jnp.asarray(np.stack(
+            [[mbs[r][t][k] for r in range(R)] for t in range(tau)]))
+            for k in ("tokens", "labels")}
+
+    def _global_params(self):
+        """Replica 0's copy — identical to all others right after the
+        interval's aggregation (asserted in tests)."""
+        return jax.tree.map(lambda l: l[0], self.params)
+
+    def evaluate(self) -> float:
+        g = self._global_params()
+        losses = []
+        for _ in range(self.tcfg.eval_batches):
+            b = next(self._eval_gen)
+            losses.append(float(self._eval_loss(
+                g, {k: jnp.asarray(v) for k, v in b.items()})))
+        return float(np.mean(losses))
+
+    def save(self, path: Optional[str] = None):
+        p = path or str(Path(self.tcfg.ckpt_dir)
+                        / f"interval_{self.interval:06d}.npz")
+        Path(p).parent.mkdir(parents=True, exist_ok=True)
+        save_train_state(p, self.params, (), self.interval)
+        return p
+
+    def restore(self, path: str):
+        self.params, _, self.interval, _ = restore_train_state(path)
+        return self
+
+    # ------------------------------------------------------------------
+    def run(self, intervals: Optional[int] = None):
+        if self.params is None:
+            self.init()
+        n = intervals if intervals is not None else self.tcfg.intervals
+        events = (self.scale.tau // self.scale.consensus_every
+                  if self.scale.consensus_every else 0)
+        for _ in range(n):
+            batch = self._interval_batch()
+            self.key, kp = jax.random.split(self.key)
+            picks = jax.random.randint(
+                kp, (self.net.num_clusters,), 0, self.scale.cluster_size)
+            self.params, loss = self._step(
+                self.params, batch, picks, jnp.asarray(self.interval))
+            self.interval += 1
+            self.ledger.record_aggregation(self.net.num_clusters)
+            self.ledger.record_consensus(
+                [self.scale.gamma_d2d] * self.net.num_clusters * events,
+                list(self.net.num_d2d_edges()) * events)
+            self.ledger.record_local_step(
+                self.scale.replicas * self.scale.tau)
+            logs = {"train_loss": float(loss),
+                    "uplinks": self.ledger.uplinks,
+                    "d2d_msgs": self.ledger.d2d_msgs}
+            if self.tcfg.eval_every and \
+                    self.interval % self.tcfg.eval_every == 0:
+                logs["eval_loss"] = self.evaluate()
+            self.metrics.log(self.interval, **logs)
+            if self.tcfg.ckpt_every and \
+                    self.interval % self.tcfg.ckpt_every == 0:
+                self.save()
+        return self

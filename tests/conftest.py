@@ -1,0 +1,14 @@
+"""Shared fixtures. NOTE: tests run on the single real CPU device —
+the 512-device production mesh lives ONLY in launch/dryrun.py."""
+import os
+
+# determinism + keep hypothesis/jax quiet on this 1-core box
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,137 @@
+"""Attention unit tests: flash == simple (fwd + grad) across masks,
+GQA grouping, RoPE properties, decode against cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    flash_attention, simple_attention, _mask_block,
+)
+from repro.models.common import rope
+
+
+def _qkv(B=2, T=128, K=2, G=2, hd=16, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, T, K, G, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, K, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("mode,window,prefix", [
+    ("causal", 0, None), ("sliding", 32, None), ("sliding", 7, None),
+    ("prefix", 0, 13), ("full", 0, None),
+])
+def test_flash_equals_simple_forward(mode, window, prefix):
+    q, k, v = _qkv()
+    o1 = flash_attention(q, k, v, mode=mode, window=window,
+                         prefix_len=prefix, q_chunk=32, k_chunk=64)
+    o2 = simple_attention(q, k, v, mode=mode, window=window,
+                          prefix_len=prefix)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+@pytest.mark.parametrize("mode,window,prefix", [
+    ("causal", 0, None), ("sliding", 16, None), ("prefix", 0, 9),
+])
+def test_flash_gradients_equal_simple(mode, window, prefix):
+    q, k, v = _qkv(T=64)
+    f = lambda *a: (flash_attention(*a, mode=mode, window=window,
+                                    prefix_len=prefix, q_chunk=16,
+                                    k_chunk=16) ** 2).sum()
+    s = lambda *a: (simple_attention(*a, mode=mode, window=window,
+                                     prefix_len=prefix) ** 2).sum()
+    g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(s, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+@given(qc=st.sampled_from([16, 32, 64]), kc=st.sampled_from([16, 32, 64]))
+@settings(max_examples=9, deadline=None)
+def test_flash_chunk_size_invariance(qc, kc):
+    q, k, v = _qkv(T=64)
+    base = simple_attention(q, k, v, mode="causal")
+    out = flash_attention(q, k, v, mode="causal", q_chunk=qc, k_chunk=kc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=2e-5)
+
+
+def test_mask_block_semantics():
+    q_pos = jnp.arange(4) + 2
+    k_pos = jnp.arange(8)
+    causal = _mask_block(q_pos, k_pos, "causal", 0, 0)
+    assert bool(causal[0, 2]) and not bool(causal[0, 3])
+    sw = _mask_block(q_pos, k_pos, "sliding", 2, 0)
+    # q=2 sees k in (0, 2]: k=1,2
+    assert not bool(sw[0, 0]) and bool(sw[0, 1]) and bool(sw[0, 2])
+    pf = _mask_block(q_pos, k_pos, "prefix", 0, 4)
+    # q=2 (inside prefix) sees k=3 (also prefix) though 3 > 2
+    assert bool(pf[0, 3]) and not bool(pf[0, 4])
+
+
+def test_rope_preserves_norm_and_relativity():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 6, 2, 16)), jnp.float32)
+    pos = jnp.arange(6)
+    y = rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    dots = []
+    for p in (0, 5):
+        qr = rope(q, jnp.asarray([p]))
+        kr = rope(k, jnp.asarray([p + 3]))
+        dots.append(float(jnp.sum(qr * kr)))
+    assert abs(dots[0] - dots[1]) < 1e-4
+
+
+def test_gqa_grouping_consistency():
+    """GQA with G groups == MHA when K/V are repeated per group."""
+    B, T, K, G, hd = 1, 16, 2, 3, 8
+    q, k, v = _qkv(B, T, K, G, hd)
+    out = simple_attention(q, k, v, mode="causal")
+    # expand to MHA: each (k-head, group) pair becomes its own kv head
+    q_mha = q.reshape(B, T, K * G, 1, hd)
+    k_mha = jnp.repeat(k, G, axis=2)
+    v_mha = jnp.repeat(v, G, axis=2)
+    out_mha = simple_attention(q_mha, k_mha, v_mha, mode="causal")
+    np.testing.assert_allclose(np.asarray(out).reshape(B, T, -1),
+                               np.asarray(out_mha).reshape(B, T, -1),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("mode,window,prefix", [
+    ("causal", 0, None), ("sliding", 48, None), ("prefix", 0, 37),
+])
+def test_pair_scheduled_flash_matches_simple(mode, window, prefix):
+    from repro.models.attention import flash_attention_pairs
+    q, k, v = _qkv(T=128)
+    o1 = flash_attention_pairs(q, k, v, mode=mode, window=window,
+                               prefix_len=prefix, q_chunk=32, k_chunk=32)
+    o2 = simple_attention(q, k, v, mode=mode, window=window,
+                          prefix_len=prefix)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+    f = lambda *a: (flash_attention_pairs(
+        *a, mode=mode, window=window, prefix_len=prefix, q_chunk=32,
+        k_chunk=32) ** 2).sum()
+    s = lambda *a: (simple_attention(*a, mode=mode, window=window,
+                                     prefix_len=prefix) ** 2).sum()
+    g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(s, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+def test_pair_schedule_visits_fewer_blocks():
+    from repro.models.attention import _block_pairs
+    full = len(_block_pairs(8, 8, 64, 64, "full", 0, None, 0))
+    causal = len(_block_pairs(8, 8, 64, 64, "causal", 0, None, 0))
+    sliding = len(_block_pairs(8, 8, 64, 64, "sliding", 64, None, 0))
+    assert full == 64
+    assert causal == 36           # lower triangle incl. diagonal
+    assert sliding == 15          # banded: diag + one off-diagonal

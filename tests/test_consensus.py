@@ -1,0 +1,96 @@
+"""Consensus operator properties: mean preservation (exactly — V is
+doubly stochastic), contraction (Lemma 1), and pytree mixing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    broadcast_pytree, cluster_means, consensus_error, divergence_upsilon,
+    lemma1_bound, mix, mix_pytree, metropolis_weights, ring_adjacency,
+    spectral_radius, geometric_adjacency,
+)
+
+
+def _net(N, s, seed=0):
+    rng = np.random.default_rng(seed)
+    adjs = [geometric_adjacency(s, 0.8, rng) for _ in range(N)]
+    V = np.stack([metropolis_weights(a) for a in adjs])
+    lam = np.array([spectral_radius(v) for v in V])
+    return jnp.asarray(V, jnp.float32), lam
+
+
+@given(gamma=st.integers(0, 12), seed=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_mix_preserves_cluster_mean(gamma, seed):
+    N, s, M = 3, 5, 17
+    V, _ = _net(N, s, seed)
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
+    out = mix(z, V, jnp.full((N,), gamma, jnp.int32))
+    np.testing.assert_allclose(np.asarray(cluster_means(out)),
+                               np.asarray(cluster_means(z)),
+                               rtol=0, atol=1e-4)
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=15, deadline=None)
+def test_consensus_error_contracts(seed):
+    """More rounds -> strictly smaller consensus error (for eps > 0)."""
+    N, s, M = 2, 6, 11
+    V, _ = _net(N, s, seed)
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
+    errs = [float(consensus_error(
+        mix(z, V, jnp.full((N,), g, jnp.int32))).sum()) for g in (0, 2, 6)]
+    assert errs[1] < errs[0] and errs[2] < errs[1]
+
+
+@given(gamma=st.integers(1, 20), seed=st.integers(0, 30))
+@settings(max_examples=25, deadline=None)
+def test_lemma1_bound_holds(gamma, seed):
+    """||e_i|| <= lambda^Gamma * s * Upsilon * M, elementwise over devices."""
+    N, s, M = 1, 5, 8
+    V, lam = _net(N, s, seed)
+    rng = np.random.default_rng(seed + 99)
+    z = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
+    ups = float(divergence_upsilon(z)[0])
+    out = mix(z, V, jnp.full((N,), gamma, jnp.int32))
+    e = np.asarray(out - cluster_means(out)[:, None])
+    norms = np.linalg.norm(e[0], axis=-1)
+    bound = lemma1_bound(float(lam[0]), gamma, s, ups, M)
+    assert (norms <= bound + 1e-5).all()
+
+
+def test_mix_per_cluster_gammas_differ():
+    N, s, M = 2, 4, 6
+    V, _ = _net(N, s, 1)
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
+    out = mix(z, V, jnp.asarray([0, 5], jnp.int32))
+    # cluster 0 untouched, cluster 1 mixed
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(z[0]))
+    assert not np.allclose(np.asarray(out[1]), np.asarray(z[1]))
+
+
+def test_mix_pytree_matches_flat():
+    N, s = 2, 5
+    V, _ = _net(N, s, 2)
+    rng = np.random.default_rng(3)
+    I = N * s
+    params = {"w": jnp.asarray(rng.normal(size=(I, 4, 3)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(I, 7)), jnp.float32)}
+    gamma = jnp.asarray([2, 3], jnp.int32)
+    out = mix_pytree(params, V, gamma, N)
+    for name, leaf in params.items():
+        flat = leaf.reshape(N, s, -1)
+        expect = mix(flat, V, gamma).reshape(leaf.shape)
+        np.testing.assert_allclose(np.asarray(out[name]),
+                                   np.asarray(expect), atol=1e-6)
+
+
+def test_broadcast_pytree():
+    g = {"w": jnp.ones((3, 2))}
+    out = broadcast_pytree(g, 7)
+    assert out["w"].shape == (7, 3, 2)

@@ -1,0 +1,69 @@
+"""Trip-count-aware HLO cost analysis — correctness against known
+workloads (this underpins every §Roofline number)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    x = jnp.ones((64, 128))
+    w = jnp.ones((128, 32))
+    txt = _compile_text(lambda a, b: a @ b, x, w)
+    c = analyze_hlo(txt)
+    assert abs(c.flops - 2 * 64 * 128 * 32) / (2 * 64 * 128 * 32) < 0.01
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+    x = jnp.ones((128, 128))
+    ws = jnp.ones((12, 128, 128))
+    c = analyze_hlo(_compile_text(f, x, ws))
+    expect = 12 * 2 * 128 ** 3
+    assert abs(c.flops - expect) / expect < 0.01
+
+
+def test_nested_scan():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            return jax.lax.scan(inner, c, None, length=5)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+    x = jnp.ones((64, 64))
+    ws = jnp.ones((4, 64, 64))
+    c = analyze_hlo(_compile_text(f, x, ws))
+    expect = 20 * 2 * 64 ** 3
+    assert abs(c.flops - expect) / expect < 0.01
+
+
+def test_grad_of_scan_counts_backward():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, ws)[0].sum()
+    x = jnp.ones((64, 64))
+    ws = jnp.ones((6, 64, 64))
+    c = analyze_hlo(_compile_text(jax.grad(f, argnums=1), x, ws))
+    # fwd 6 + bwd (dx, dw) 12 = 18 matmuls
+    expect = 18 * 2 * 64 ** 3
+    assert abs(c.flops - expect) / expect < 0.05
+
+
+def test_bytes_nonzero_and_bounded():
+    def f(x, w):
+        return jnp.tanh(x @ w)
+    x = jnp.ones((256, 256))
+    w = jnp.ones((256, 256))
+    c = analyze_hlo(_compile_text(f, x, w))
+    lo = 3 * 256 * 256 * 4            # read x, w; write out
+    assert lo <= c.bytes <= 12 * lo

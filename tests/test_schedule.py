@@ -1,0 +1,59 @@
+"""Remark-1 adaptive Gamma rule + step-size schedules."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import TTHFConfig
+from repro.core import adaptive_gamma, fixed_gamma, lemma1_bound, \
+    make_lr_schedule
+from repro.optim.schedules import paper_schedule
+
+
+def test_paper_schedule_decays_as_1_over_t():
+    eta = paper_schedule(gamma=2.0, alpha=8.0)
+    assert float(eta(0)) == 2.0 / 8.0
+    assert abs(float(eta(1000)) - 2.0 / 1008.0) < 1e-9
+
+
+@given(ups=st.floats(1e-6, 10.0), lam=st.floats(0.3, 0.95),
+       t=st.integers(0, 500))
+@settings(max_examples=40, deadline=None)
+def test_adaptive_gamma_achieves_target(ups, lam, t):
+    """Remark 1: the chosen Gamma makes the Lemma-1 bound <= eta_t*phi."""
+    phi, s, M = 1.0, 5, 100
+    eta = paper_schedule(1.0, 4.0)
+    eta_t = float(eta(t))
+    g = int(adaptive_gamma(jnp.asarray(eta_t), phi, jnp.asarray([ups]),
+                           jnp.asarray([lam]), s, M, max_rounds=4000)[0])
+    bound = lemma1_bound(lam, g, s, ups, M)
+    target = eta_t * phi
+    if g < 4000:   # not clipped
+        assert bound <= target * (1 + 1e-5) or g == 0
+    if g == 0:     # Gamma=0 must only happen when already within target
+        assert s * ups * M <= target
+
+
+def test_adaptive_gamma_aperiodic():
+    """Small divergence -> zero rounds (aperiodicity, Remark 1)."""
+    g = adaptive_gamma(jnp.asarray(0.1), 1.0, jnp.asarray([1e-12]),
+                       jnp.asarray([0.7]), 5, 100)
+    assert int(g[0]) == 0
+
+
+def test_consensus_calendar():
+    cfg = TTHFConfig(tau=20, consensus_every=5)
+    agg = [t for t in range(1, 41) if cfg.is_aggregation_step(t)]
+    cons = [t for t in range(1, 41) if cfg.is_consensus_step(t)]
+    assert agg == [20, 40]
+    assert cons == [5, 10, 15, 20, 25, 30, 35, 40]
+
+
+def test_fixed_gamma():
+    assert fixed_gamma(3, 4).tolist() == [4, 4, 4]
+
+
+def test_lr_schedule_selection():
+    eta = make_lr_schedule(TTHFConfig(constant_lr=0.01))
+    assert abs(float(eta(500)) - 0.01) < 1e-7
+    eta2 = make_lr_schedule(TTHFConfig(gamma=2.0, alpha=10.0))
+    assert abs(float(eta2(0)) - 0.2) < 1e-6

@@ -1,0 +1,117 @@
+"""End-to-end behaviour tests for the whole system (Algorithm 1 +
+baselines + ledger accounting + the energy/delay model)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import TopologyConfig, TTHFConfig
+from repro.core import CommLedger, TTHFTrainer, make_baseline_config
+from repro.data import fashion_synth, partition_noniid_labels
+from repro.models import make_sim_model
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    x, y = fashion_synth(num_points=2000, seed=0)
+    data = partition_noniid_labels(x, y, num_devices=20)
+    topo = TopologyConfig(num_devices=20, num_clusters=4,
+                          graph="geometric", seed=0)
+    model = make_sim_model("svm", 784, 10)
+    return data, topo, model
+
+
+def test_algorithm1_end_to_end(small_world):
+    data, topo, model = small_world
+    algo = TTHFConfig(tau=10, consensus_every=5, gamma_d2d=2,
+                      constant_lr=0.002)
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=8)
+    st, hist = tr.run(steps=50, eval_every=10)
+    assert st.t == 50
+    assert hist.global_loss[-1] < hist.global_loss[0]
+    assert hist.global_acc[-1] > 0.15
+    # ledger: 5 aggregations, cluster-sampled -> 4 uplinks each
+    assert tr.ledger.uplinks == 5 * 4
+    assert tr.ledger.d2d_msgs > 0
+    assert tr.ledger.local_steps == 50 * 20
+
+
+def test_baseline_full_participation_uplinks(small_world):
+    data, topo, model = small_world
+    algo = dataclasses.replace(make_baseline_config("fedavg", 10),
+                               constant_lr=0.002)
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=8)
+    tr.run(steps=30, eval_every=10)
+    assert tr.ledger.uplinks == 20 * 3     # full participation
+    assert tr.ledger.d2d_msgs == 0
+
+
+def test_nn_model_trains(small_world):
+    data, topo, _ = small_world
+    model = make_sim_model("nn", 784, 10, hidden=32)
+    algo = TTHFConfig(tau=10, consensus_every=5, gamma_d2d=2,
+                      constant_lr=0.05)
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=8)
+    _, hist = tr.run(steps=40, eval_every=10)
+    assert hist.global_loss[-1] < hist.global_loss[0]
+
+
+def test_adaptive_gamma_runs(small_world):
+    data, topo, model = small_world
+    algo = TTHFConfig(tau=10, consensus_every=5, gamma_d2d=-1, phi=0.5,
+                      gamma=40.0, alpha=400.0)
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=8)
+    _, hist = tr.run(steps=30, eval_every=5)
+    gammas = np.stack(hist.gamma_used)
+    assert gammas.max() > 0
+    assert gammas.max() <= 64
+
+
+def test_energy_delay_tradeoff(small_world):
+    """Fig. 6 mechanics: TT-HF wins on energy for small E_D2D/E_Glob and
+    the advantage shrinks as the ratio grows."""
+    data, topo, model = small_world
+    lr = 0.002
+    tthf = TTHFConfig(tau=10, consensus_every=5, gamma_d2d=2,
+                      constant_lr=lr)
+    fed = dataclasses.replace(make_baseline_config("fedavg", 1),
+                              constant_lr=lr)
+    tr1 = TTHFTrainer(model, data, topo, tthf, batch_size=8)
+    tr1.run(steps=30, eval_every=30)
+    tr2 = TTHFTrainer(model, data, topo, fed, batch_size=8)
+    tr2.run(steps=30, eval_every=30)
+    assert tr1.ledger.energy(0.01) < tr2.ledger.energy(0.01)
+    gap_cheap = tr2.ledger.energy(0.01) - tr1.ledger.energy(0.01)
+    gap_pricey = tr2.ledger.energy(1.0) - tr1.ledger.energy(1.0)
+    assert gap_pricey < gap_cheap
+
+
+def test_checkpointing_roundtrip(tmp_path, small_world):
+    data, topo, model = small_world
+    algo = TTHFConfig(tau=10, consensus_every=5, gamma_d2d=1,
+                      constant_lr=0.002)
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=8)
+    st, _ = tr.run(steps=10, eval_every=10)
+    from repro.checkpoint import restore_pytree, save_pytree
+    f = str(tmp_path / "state.npz")
+    save_pytree(f, {"params": st.params, "global": st.global_params})
+    loaded = restore_pytree(f)
+    np.testing.assert_allclose(np.asarray(loaded["global"]["w"]),
+                               np.asarray(st.global_params["w"]))
+
+
+def test_cli_train_sim_smoke(capsys):
+    from repro.launch.train import main
+    rc = main(["--mode", "sim", "--devices", "10", "--clusters", "2",
+               "--points", "1000", "--steps", "20", "--tau", "10",
+               "--lr", "0.002", "--eval-every", "10"])
+    assert rc == 0
+    assert "final_loss" in capsys.readouterr().out
+
+
+def test_cli_serve_smoke(capsys):
+    from repro.launch.serve import main
+    rc = main(["--arch", "qwen1.5-0.5b", "--reduced", "--batch", "2",
+               "--prompt-len", "16", "--gen", "4"])
+    assert rc == 0
+    assert "tok/s" in capsys.readouterr().out

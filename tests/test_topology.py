@@ -1,0 +1,70 @@
+"""Topology & consensus-matrix invariants (Assumption 2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import TopologyConfig
+from repro.core import (
+    build_network, check_assumption2, complete_adjacency,
+    geometric_adjacency, laplacian_weights, metropolis_weights,
+    ring_adjacency, spectral_radius,
+)
+
+
+@given(s=st.integers(2, 24))
+@settings(max_examples=20, deadline=None)
+def test_ring_metropolis_satisfies_assumption2(s):
+    adj = ring_adjacency(s)
+    v = metropolis_weights(adj)
+    check_assumption2(v, adj)
+
+
+@given(s=st.integers(2, 16))
+@settings(max_examples=15, deadline=None)
+def test_complete_laplacian_satisfies_assumption2(s):
+    adj = complete_adjacency(s)
+    v = laplacian_weights(adj)
+    check_assumption2(v, adj)
+
+
+@given(s=st.integers(3, 12), seed=st.integers(0, 1000),
+       radius=st.floats(0.5, 1.4))
+@settings(max_examples=25, deadline=None)
+def test_geometric_graphs_connected_and_valid(s, seed, radius):
+    rng = np.random.default_rng(seed)
+    adj = geometric_adjacency(s, radius, rng)
+    v = metropolis_weights(adj)
+    check_assumption2(v, adj)
+
+
+def test_consensus_matrix_power_converges_to_mean():
+    """V^k -> 11^T/s (the defining property behind Lemma 1)."""
+    adj = ring_adjacency(5)
+    v = metropolis_weights(adj)
+    w = np.linalg.matrix_power(v, 200)
+    assert np.allclose(w, np.ones((5, 5)) / 5, atol=1e-8)
+
+
+def test_spectral_radius_decreases_with_density():
+    ring = spectral_radius(metropolis_weights(ring_adjacency(8)))
+    comp = spectral_radius(metropolis_weights(complete_adjacency(8)))
+    assert comp < ring
+
+
+def test_build_network_paper_config():
+    """Paper Sec. IV-A: 125 devices, 25 clusters of 5, avg rho ~ 0.7."""
+    net = build_network(TopologyConfig(num_devices=125, num_clusters=25,
+                                       graph="geometric",
+                                       target_spectral_radius=0.7, seed=3))
+    assert net.V.shape == (25, 5, 5)
+    assert net.num_devices == 125
+    assert abs(net.lambdas.mean() - 0.7) < 0.12
+    assert np.allclose(net.varrho.sum(), 1.0)
+
+
+def test_build_network_ring():
+    net = build_network(TopologyConfig(num_devices=16, num_clusters=4,
+                                       graph="ring"))
+    assert (net.lambdas < 1.0).all()
+    # ring of 4: every node has exactly 2 neighbours
+    assert (net.adj.sum(-1) == 2).all()
