@@ -8,6 +8,8 @@ run.py as ``name,us_per_call,derived`` CSV.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from dataclasses import dataclass
 
@@ -20,6 +22,37 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def append_trajectory(name: str, rows: list, scale: str,
+                      out_dir: str = "benchmarks/results") -> str:
+    """Append one record to the ``BENCH_<name>.json`` trajectory.
+
+    The trajectory is a JSON list, one record per benchmark run
+    ({unix_ts, scale, rows}) — the machine-readable history that lets a
+    PR show whether its hot path got faster. Returns the file path.
+    """
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    os.makedirs(out_dir, exist_ok=True)
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            # keep the unreadable file aside instead of clobbering it
+            os.replace(path, path + ".corrupt")
+            history = []
+    history.append({
+        "unix_ts": int(time.time()),
+        "scale": scale,
+        "rows": [dataclasses.asdict(r) for r in rows],
+    })
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=1)
+    os.replace(tmp, path)   # atomic: a killed run cannot truncate history
+    return path
 
 
 def timed(fn, *args, repeats: int = 3, **kw):

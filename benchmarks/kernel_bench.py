@@ -1,37 +1,60 @@
 """Pallas kernel micro-benchmarks (interpret mode on CPU — wall times
 are NOT TPU times; the derived column reports the analytic HBM-traffic
-saving of the fused kernel, which is hardware-independent)."""
+saving of the fused kernel, which is hardware-independent).
+
+Consensus mixing sweeps EVERY backend of the unified engine
+(``repro.core.mixing``) and appends per-backend timings to the
+``benchmarks/results/BENCH_mixing.json`` trajectory."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, timed
+from benchmarks.common import Row, append_trajectory, timed
 
 
-def run(scale: str = "ci", seed: int = 0) -> list[Row]:
+def _bench_mixing(scale: str, seed: int) -> list[Row]:
+    from repro.core import mixing
     from repro.core.topology import metropolis_weights, ring_adjacency
-    from repro.kernels import ops, ref
 
     rng = np.random.default_rng(seed)
-    rows = []
-
-    # consensus_mix: paper config N=25 clusters of s=5, SVM-sized M
+    # paper config: N=25 clusters of s=5, SVM-sized M
     N, s, M = (25, 5, 7850) if scale == "paper" else (5, 5, 1024)
     z = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
     V = jnp.asarray(np.stack([metropolis_weights(ring_adjacency(s))
                               for _ in range(N)]), jnp.float32)
+    rows = []
     for gamma in (2, 8, 16):
-        g = jnp.full((N,), gamma, jnp.int32)
-        out_k, us_k = timed(lambda: np.asarray(ops.consensus_mix(z, V, g)))
-        out_r, us_r = timed(lambda: np.asarray(
-            ref.consensus_mix_ref(z, V, g)))
-        err = float(np.abs(out_k - out_r).max())
-        # fused kernel: 2sM HBM words; per-round ref: 2*Gamma*sM
-        saving = gamma
-        rows.append(Row(f"kernel/consensus_mix/g{gamma}", us_k,
-                        f"ref_us={us_r:.0f};max_err={err:.1e};"
-                        f"hbm_traffic_saving={saving}x"))
+        # heterogeneous Remark-1 round counts averaging ~gamma
+        g = jnp.asarray(rng.integers(max(gamma - 1, 0), gamma + 2,
+                                     size=(N,)), jnp.int32)
+        ref_out = np.asarray(mixing.mix(z, V, g, backend="reference"))
+        for backend in mixing.BACKENDS:
+            plan = mixing.build_mixing_plan(V, np.asarray(g),
+                                            backend=backend)
+            if backend == "reference":
+                fn = lambda: np.asarray(plan.apply(z))          # noqa: E731
+            else:
+                jfn = jax.jit(plan.apply)
+                fn = lambda: np.asarray(jfn(z))                 # noqa: E731
+            out, us = timed(fn)
+            err = float(np.abs(out - ref_out).max())
+            # fused paths: 2sM HBM words; per-round: 2*Gamma*sM
+            saving = "1x" if backend in ("reference", "masked_loop") \
+                else f"{gamma}x"
+            rows.append(Row(f"mixing/{backend}/g{gamma}", us,
+                            f"max_err={err:.1e};"
+                            f"hbm_traffic_saving={saving}"))
+    return rows
+
+
+def run(scale: str = "ci", seed: int = 0) -> list[Row]:
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(seed)
+    rows = _bench_mixing(scale, seed)
+    append_trajectory("mixing", rows, scale)
 
     # ssd_scan: mamba2 head shapes
     BH, T, P, S = (8, 2048, 64, 128) if scale == "paper" else (4, 512, 64, 128)

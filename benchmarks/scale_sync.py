@@ -1,8 +1,12 @@
 """Scale-mode sync-strategy comparison: TT-HF vs star (FedAvg) vs
 local-only, on a reduced model-zoo arch — validates that the paper's
 technique transfers to the transformer training path, and compares the
-paper-faithful ``rounds`` consensus against the beyond-paper ``fused``
-V^Gamma variant (identical losses, fewer collectives).
+consensus backends of the unified engine (``core/mixing.py``): the
+paper-faithful ``rounds`` (-> reference) sequential exchanges, the
+``masked_loop`` bounded loop, and the beyond-paper ``fused``
+(-> fused_power) build-time V^Gamma variant (identical losses, fewer
+collectives).  Per-backend interval timings are appended to the
+``benchmarks/results/BENCH_scale_sync.json`` trajectory.
 """
 from __future__ import annotations
 
@@ -10,7 +14,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, append_trajectory
 
 
 def run(scale: str = "ci", seed: int = 0) -> list[Row]:
@@ -33,6 +37,7 @@ def run(scale: str = "ci", seed: int = 0) -> list[Row]:
     rows = []
     losses_by_mode = {}
     for sync, cmode in (("tthf", "fused"), ("tthf", "rounds"),
+                        ("tthf", "masked_loop"),
                         ("star", "fused"), ("local", "fused")):
         scale_cfg = TTHFScaleConfig(replicas=R, cluster_size=s, tau=tau,
                                     consensus_every=2, gamma_d2d=2,
@@ -58,7 +63,12 @@ def run(scale: str = "ci", seed: int = 0) -> list[Row]:
     # fused == rounds (same math)
     d = max(abs(a - b) for a, b in zip(losses_by_mode["tthf_fused"],
                                        losses_by_mode["tthf_rounds"]))
+    d_loop = max(abs(a - b)
+                 for a, b in zip(losses_by_mode["tthf_fused"],
+                                 losses_by_mode["tthf_masked_loop"]))
     rows.append(Row("scale_sync/claims", 0.0,
                     f"fused_equals_rounds={d < 1e-4};"
+                    f"fused_equals_masked_loop={d_loop < 1e-4};"
                     f"tthf_trains={losses_by_mode['tthf_fused'][-1] < losses_by_mode['tthf_fused'][0]}"))
+    append_trajectory("scale_sync", rows, scale)
     return rows

@@ -8,6 +8,10 @@ from repro.core.consensus import (
     mix, mix_once, mix_pytree, cluster_means, consensus_error,
     divergence_upsilon,
 )
+from repro.core.mixing import (
+    BACKENDS, MixingPlan, build_mixing_plan, canonical_backend,
+    matrix_powers,
+)
 from repro.core.schedule import adaptive_gamma, fixed_gamma, make_lr_schedule
 from repro.core.sampling import (
     sample_devices, sampled_global_model, sampled_global_pytree,
@@ -27,6 +31,8 @@ __all__ = [
     "complete_adjacency", "geometric_adjacency",
     "mix", "mix_once", "mix_pytree", "cluster_means", "consensus_error",
     "divergence_upsilon",
+    "BACKENDS", "MixingPlan", "build_mixing_plan", "canonical_backend",
+    "matrix_powers",
     "adaptive_gamma", "fixed_gamma", "make_lr_schedule",
     "sample_devices", "sampled_global_model", "sampled_global_pytree",
     "full_global_pytree", "broadcast_pytree",

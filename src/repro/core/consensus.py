@@ -4,12 +4,15 @@ State layout: device parameters stacked on a leading axis, reshaped per
 cluster to ``(N, s, M)``. One consensus *round* is the block-diagonal
 product ``z <- V_c z`` applied independently per cluster; an *event*
 applies ``Gamma_c`` rounds (possibly different per cluster — devices in
-cluster c stop mixing after Gamma_c rounds, which we express as masked
-selects inside a fori_loop so the whole event stays jittable).
+cluster c stop mixing after Gamma_c rounds).
 
-The Pallas kernel (`repro.kernels.consensus_mix`) implements the fused
-Gamma-round product for the TPU target; `use_kernel=True` routes through
-it (interpret mode on CPU).
+Execution is delegated to the unified engine in
+:mod:`repro.core.mixing` (DESIGN.md §5): the default backend is the
+jittable ``masked_loop``; ``use_kernel=True`` (or ``backend="pallas"``)
+routes through the fused Pallas kernel, and ``backend`` exposes the
+full dispatch table (``reference``/``masked_loop``/``pallas``/
+``fused_power``).  This module keeps the simulation-facing API and the
+consensus *metrics* (Definitions 2-3).
 """
 from __future__ import annotations
 
@@ -18,6 +21,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import mixing
+
 
 def mix_once(z: jax.Array, V: jax.Array) -> jax.Array:
     """One consensus round. z: (N, s, M); V: (N, s, s)."""
@@ -25,46 +30,40 @@ def mix_once(z: jax.Array, V: jax.Array) -> jax.Array:
                       preferred_element_type=z.dtype)
 
 
-@partial(jax.jit, static_argnames=("use_kernel",))
+def _resolve_backend(use_kernel: bool, backend: str | None) -> str:
+    if backend is not None:
+        return mixing.canonical_backend(backend)
+    return "pallas" if use_kernel else "masked_loop"
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _mix_jit(z, V, gamma, backend):
+    return mixing.mix(z, V, gamma, backend=backend)
+
+
 def mix(z: jax.Array, V: jax.Array, gamma: jax.Array,
-        use_kernel: bool = False) -> jax.Array:
+        use_kernel: bool = False, backend: str | None = None) -> jax.Array:
     """Apply per-cluster consensus: z_c <- V_c^{gamma_c} z_c.
 
     z: (N, s, M); V: (N, s, s); gamma: scalar or (N,) int32.
+    The ``reference`` backend unrolls gamma in Python, so it runs
+    outside this function's jit (gamma must stay concrete).
     """
-    gamma = jnp.asarray(gamma, jnp.int32)
-    if gamma.ndim == 0:
-        gamma = jnp.full((z.shape[0],), gamma)
-    if use_kernel:
-        from repro.kernels import ops as kops
-        return kops.consensus_mix(z, V, gamma)
-
-    max_gamma = jnp.max(gamma)
-
-    def body(r, zz):
-        mixed = mix_once(zz, V)
-        keep = (r < gamma)[:, None, None]    # cluster still mixing?
-        return jnp.where(keep, mixed, zz)
-
-    # bounded loop: max over clusters; masked per cluster
-    return jax.lax.fori_loop(0, max_gamma, body, z)
+    backend = _resolve_backend(use_kernel, backend)
+    if backend == "reference":
+        return mixing.mix(z, V, gamma, backend=backend)
+    return _mix_jit(z, V, gamma, backend)
 
 
 def mix_pytree(params, V: jax.Array, gamma: jax.Array, num_clusters: int,
-               use_kernel: bool = False):
+               use_kernel: bool = False, backend: str | None = None):
     """Consensus over a pytree whose leaves have leading axis I = N*s.
 
     Mixing is linear and elementwise across parameters, so each leaf is
     reshaped (I, ...) -> (N, s, M) and mixed independently.
     """
-    def one(leaf):
-        I = leaf.shape[0]
-        s = I // num_clusters
-        flat = leaf.reshape(num_clusters, s, -1)
-        mixed = mix(flat, V.astype(flat.dtype), gamma, use_kernel=use_kernel)
-        return mixed.reshape(leaf.shape)
-
-    return jax.tree.map(one, params)
+    return mixing.mix_pytree(params, V, gamma, num_clusters,
+                             backend=_resolve_backend(use_kernel, backend))
 
 
 def cluster_means(z: jax.Array) -> jax.Array:

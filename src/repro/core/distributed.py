@@ -19,14 +19,20 @@ consensus events static in the HLO (aperiodicity via the *fixed* event
 calendar; the Remark-1 adaptive round count is a simulation-mode
 feature — scale mode takes Gamma from config).
 
-Consensus execution has two modes (a §Perf comparison axis):
-  * ``rounds`` — paper-faithful: Gamma sequential ``z <- V z`` products,
-    one neighbour exchange each (what edge devices must do);
-  * ``fused``  — beyond-paper: precompute W = V^Gamma (numpy, static)
-    and apply ONE mixing einsum; on a TPU mesh every cluster member is
-    reachable, so Gamma exchanges collapse into one collective of the
-    same payload. Identical math (associativity), ~Gamma x less launch
-    + latency cost.
+Consensus execution dispatches through the unified engine
+(:mod:`repro.core.mixing`, DESIGN.md §5).  ``consensus_mode`` is a
+backend name; the legacy aliases remain the §Perf comparison axis:
+  * ``rounds`` (-> ``reference``) — paper-faithful: Gamma sequential
+    ``z <- V z`` products, one neighbour exchange each (what edge
+    devices must do);
+  * ``fused``  (-> ``fused_power``) — beyond-paper: W = V^Gamma is
+    precomputed ONCE at step-build time and applied as ONE mixing
+    einsum; on a TPU mesh every cluster member is reachable, so Gamma
+    exchanges collapse into one collective of the same payload.
+    Identical math (associativity), ~Gamma x less launch + latency
+    cost.  Per-cluster aperiodic Gamma_c vectors (Remark 1) are now
+    supported in scale mode — each cluster's block of W gets its own
+    power.
 """
 from __future__ import annotations
 
@@ -36,10 +42,10 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import TopologyConfig
+from repro.core.mixing import MixingPlan, build_mixing_plan
 from repro.core.topology import Network, build_network
 from repro.dist.sharding import drop_hint_axes
 from repro.models.registry import ModelApi
@@ -52,7 +58,9 @@ class TTHFScaleConfig:
     tau: int = 20                   # local interval length
     consensus_every: int = 5        # D2D event calendar
     gamma_d2d: int = 2              # rounds per event (static)
-    consensus_mode: str = "fused"   # fused | rounds
+    consensus_mode: str = "fused"   # mixing backend (core/mixing.py):
+                                    # fused|rounds aliases or reference|
+                                    # masked_loop|pallas|fused_power
     lr: float = 1e-2
     sample_per_cluster: int = 1
     graph: str = "ring"             # TPU-native default
@@ -75,29 +83,18 @@ class TTHFScaleConfig:
 # from the replica-axis sharding of the mixing einsum)
 # ---------------------------------------------------------------------------
 
-def _mix_leaf(leaf: jax.Array, W: jax.Array, num_clusters: int) -> jax.Array:
-    """leaf: (R, ...) -> block-diagonal mix over the replica axis."""
-    R = leaf.shape[0]
-    s = R // num_clusters
-    z = leaf.reshape(num_clusters, s, -1)
-    mixed = jnp.einsum("nij,njm->nim", W.astype(leaf.dtype), z)
-    return mixed.reshape(leaf.shape)
+def consensus_event(params, net: Network, gamma, mode: str = "fused"):
+    """One D2D consensus event over the replica axis.
 
-
-def consensus_event(params, net: Network, gamma: int, mode: str):
-    if gamma <= 0:
-        return params
-    if mode == "fused":
-        W = np.stack([np.linalg.matrix_power(v, gamma) for v in net.V])
-        W = jnp.asarray(W, jnp.float32)
-        return jax.tree.map(
-            lambda l: _mix_leaf(l, W, net.num_clusters), params)
-    # paper-faithful sequential rounds
-    V = jnp.asarray(net.V, jnp.float32)
-    for _ in range(gamma):
-        params = jax.tree.map(
-            lambda l: _mix_leaf(l, V, net.num_clusters), params)
-    return params
+    ``gamma`` may be a scalar or a per-cluster (N,) vector (Remark-1
+    heterogeneous round counts); ``mode`` is a mixing backend name or
+    one of the legacy aliases ("fused", "rounds").  Thin wrapper over
+    :func:`repro.core.mixing.build_mixing_plan` — prefer building the
+    plan once at step-build time (as ``make_tthf_train_step`` does)
+    instead of calling this per event.
+    """
+    plan = build_mixing_plan(net, gamma, backend=mode)
+    return plan.apply_pytree(params)
 
 
 def sampled_aggregation(params, net: Network, picks: jax.Array):
@@ -151,6 +148,12 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
     net = scale.network()
     assert scale.tau % scale.consensus_every == 0
     n_blocks = scale.tau // scale.consensus_every
+    # one build-time plan: for fused_power this precomputes W = V^Gamma
+    # exactly once (numpy) instead of re-deriving it inside the step
+    plan: MixingPlan | None = None
+    if sync == "tthf":
+        plan = build_mixing_plan(net, scale.gamma_d2d,
+                                 backend=scale.consensus_mode)
 
     # which mesh axes carry replicas: dp granularity -> (pod, data);
     # pod granularity (giant models: a replica needs a whole pod's HBM,
@@ -186,9 +189,8 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
                 params, loss = microstep(params, mb, lr)
                 return params, loss
             params, losses = jax.lax.scan(inner, params, block_batch)
-            if sync == "tthf":
-                params = consensus_event(params, net, scale.gamma_d2d,
-                                         scale.consensus_mode)
+            if plan is not None:
+                params = plan.apply_pytree(params)
             return params, jnp.mean(losses)
 
         params, block_losses = jax.lax.scan(block, params, batch_b)
@@ -260,11 +262,10 @@ def tthf_shardings(model: ModelApi, scale: TTHFScaleConfig, mesh: Mesh,
         lambda a: NamedSharding(mesh, rules.spec(tuple(a), mesh)),
         axes_R, is_leaf=lambda x: isinstance(x, tuple))
     # batch (tau, R, b, T): replica dim on the replica axes; per-replica
-    # batch on `data` at pod granularity
-    if scale.granularity == "pod":
-        batch_spec = P(None, "pod", "data", None)
-    else:
-        batch_spec = P(None, ("pod", "data"), None, None)
+    # batch on `data` at pod granularity (the table already encodes
+    # both — and rules.spec drops axes the mesh lacks, so the same
+    # table serves the single-pod (data, model) mesh)
+    batch_spec = rules.spec((None, "replica", "batch", None), mesh)
     return p_abs_R, sh, NamedSharding(mesh, batch_spec)
 
 

@@ -1,0 +1,235 @@
+"""Unified D2D consensus-mixing engine (DESIGN.md §5).
+
+One operator, four interchangeable backends for the paper's eq. (10)
+``z_c <- V_c^{Gamma_c} z_c`` applied to N stacked clusters:
+
+=============  ============================================================
+backend        execution strategy
+=============  ============================================================
+reference      per-round masked einsum, Python-unrolled (the oracle;
+               needs concrete gamma)
+masked_loop    jittable bounded ``fori_loop`` with per-cluster masking —
+               works with *traced* gamma (Remark-1 adaptive rounds)
+pallas         fused Gamma-round Pallas TPU kernel
+               (``repro.kernels.consensus_mix``; interpret mode on CPU)
+fused_power    ONE einsum against the stacked matrix powers
+               ``W_c = V_c^{Gamma_c}`` — the scale-mode collective
+               collapse; W is precomputed at plan-build time
+=============  ============================================================
+
+Every backend accepts a *vector* per-cluster ``gamma: (N,)`` (Remark 1:
+aperiodic, heterogeneous round counts), including ``fused_power`` —
+each cluster's block of W is raised to its own power.
+
+Call sites (the four previously-divergent paths, now routed here):
+``core/consensus.py::mix/mix_pytree`` (simulation public API),
+``core/tthf.py`` (simulation trainer), ``core/distributed.py``
+(TT-HF scale mode) and ``kernels/ops.py`` (kernel wrapper).
+
+Prefer :func:`build_mixing_plan` + :meth:`MixingPlan.apply` when gamma
+and the topology are known at step-build time — the plan precomputes
+``W`` exactly once (numpy, exact integer powers) instead of re-deriving
+it per call, and pins the dispatch statically so the jitted step closes
+over constants only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BACKENDS = ("reference", "masked_loop", "pallas", "fused_power")
+
+# scale-mode consensus_mode names kept for backward compatibility
+_BACKEND_ALIASES = {
+    "fused": "fused_power",     # one collective of the same payload
+    "rounds": "reference",      # paper-faithful sequential exchanges
+    "kernel": "pallas",
+}
+
+
+def canonical_backend(name: str) -> str:
+    """Resolve aliases ("fused", "rounds", "kernel") to backend names."""
+    backend = _BACKEND_ALIASES.get(name, name)
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown mixing backend {name!r}; expected one of "
+            f"{BACKENDS} or aliases {tuple(_BACKEND_ALIASES)}")
+    return backend
+
+
+def _normalize_gamma(gamma: Any, num_clusters: int) -> jax.Array:
+    gamma = jnp.asarray(gamma, jnp.int32)
+    if gamma.ndim == 0:
+        gamma = jnp.full((num_clusters,), gamma)
+    if gamma.shape != (num_clusters,):
+        raise ValueError(
+            f"gamma must be scalar or ({num_clusters},), got {gamma.shape}")
+    return gamma
+
+
+def matrix_powers(V: jax.Array, gamma: jax.Array) -> jax.Array:
+    """In-graph stacked powers ``W_c = V_c^{gamma_c}``; (N, s, s).
+
+    Masked bounded loop over max(gamma) — O(max_gamma * N * s^3), which
+    is tiny next to the (N, s, M) mixing it replaces.  Jittable with
+    traced gamma (the adaptive Remark-1 path).
+    """
+    N, s, _ = V.shape
+    Vf = V.astype(jnp.float32)
+    eye = jnp.broadcast_to(jnp.eye(s, dtype=jnp.float32), (N, s, s))
+
+    def body(r, W):
+        nxt = jnp.einsum("nij,njk->nik", Vf, W,
+                         preferred_element_type=jnp.float32)
+        return jnp.where((r < gamma)[:, None, None], nxt, W)
+
+    return jax.lax.fori_loop(0, jnp.max(gamma), body, eye)
+
+
+# ---------------------------------------------------------------------------
+# backend implementations — all (N, s, M) x (N, s, s) x (N,) -> (N, s, M)
+# ---------------------------------------------------------------------------
+
+def _mix_reference(z, V, gamma):
+    from repro.kernels import ref
+    try:
+        return ref.consensus_mix_ref(z, V, gamma)
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError) as e:
+        raise ValueError(
+            "backend='reference' unrolls gamma rounds in Python and needs "
+            "a concrete gamma; use 'masked_loop' (or 'pallas'/"
+            "'fused_power') under jit with traced gamma") from e
+
+
+def _mix_masked_loop(z, V, gamma):
+    Vz = V.astype(z.dtype)
+
+    def body(r, zz):
+        mixed = jnp.einsum("nij,njm->nim", Vz, zz,
+                           preferred_element_type=zz.dtype)
+        return jnp.where((r < gamma)[:, None, None], mixed, zz)
+
+    return jax.lax.fori_loop(0, jnp.max(gamma), body, z)
+
+
+def _mix_pallas(z, V, gamma, blk_m=512):
+    from repro.kernels import consensus_mix as _cm
+    from repro.kernels import ops as kops
+    return _cm.consensus_mix(z, V, gamma, blk_m=blk_m,
+                             interpret=kops.INTERPRET)
+
+
+def _mix_fused_power(z, V, gamma, W=None):
+    if W is None:
+        W = matrix_powers(V, gamma)
+    return jnp.einsum("nij,njm->nim", W.astype(z.dtype), z,
+                      preferred_element_type=z.dtype)
+
+
+def mix(z: jax.Array, V: jax.Array, gamma: Any, *,
+        backend: str = "masked_loop", W: Optional[jax.Array] = None,
+        blk_m: int = 512) -> jax.Array:
+    """Apply per-cluster consensus ``z_c <- V_c^{gamma_c} z_c``.
+
+    z: (N, s, M); V: (N, s, s); gamma: scalar or (N,) int32.
+    ``W`` (fused_power only): precomputed stacked powers; derived
+    in-graph when omitted.
+    """
+    backend = canonical_backend(backend)
+    gamma = _normalize_gamma(gamma, z.shape[0])
+    if backend == "reference":
+        return _mix_reference(z, V, gamma)
+    if backend == "masked_loop":
+        return _mix_masked_loop(z, V, gamma)
+    if backend == "pallas":
+        return _mix_pallas(z, V, gamma, blk_m=blk_m)
+    return _mix_fused_power(z, V, gamma, W=W)
+
+
+def mix_pytree(params, V: jax.Array, gamma: Any, num_clusters: int, *,
+               backend: str = "masked_loop",
+               W: Optional[jax.Array] = None):
+    """Consensus over a pytree whose leaves have leading axis I = N*s.
+
+    Mixing is linear and elementwise across parameters, so each leaf is
+    reshaped (I, ...) -> (N, s, M) and mixed independently.
+    """
+    def one(leaf):
+        I = leaf.shape[0]
+        s = I // num_clusters
+        flat = leaf.reshape(num_clusters, s, -1)
+        mixed = mix(flat, V.astype(flat.dtype), gamma,
+                    backend=backend, W=W)
+        return mixed.reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(one, params)
+
+
+# ---------------------------------------------------------------------------
+# step-build-time plans
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MixingPlan:
+    """A consensus event bound to (topology, gamma, backend) at build
+    time.  ``W`` is the exact stacked power for ``fused_power`` —
+    computed ONCE here (numpy integer matrix powers), never re-derived
+    inside the step."""
+    backend: str
+    num_clusters: int
+    cluster_size: int
+    V: jax.Array                    # (N, s, s) float32
+    gamma: jax.Array                # (N,) int32
+    W: Optional[jax.Array] = None   # (N, s, s) float32, fused_power only
+
+    @property
+    def is_noop(self) -> bool:
+        return bool(np.all(np.asarray(self.gamma) == 0))
+
+    def apply(self, z: jax.Array) -> jax.Array:
+        """z: (N, s, M) -> mixed (N, s, M)."""
+        return mix(z, self.V, self.gamma, backend=self.backend, W=self.W)
+
+    def apply_pytree(self, params):
+        """params: pytree with leading replica/device axis I = N*s."""
+        if self.is_noop:
+            return params
+        return mix_pytree(params, self.V, self.gamma, self.num_clusters,
+                          backend=self.backend, W=self.W)
+
+
+def build_mixing_plan(net, gamma: Any,
+                      backend: str = "fused_power") -> MixingPlan:
+    """Build a :class:`MixingPlan` from a ``Network`` (or a raw (N, s, s)
+    consensus-matrix stack), concrete per-cluster gamma, and a backend.
+
+    gamma may be a scalar or an (N,) vector (heterogeneous Remark-1
+    round counts) but must be concrete — plans exist so the expensive
+    derivations happen at step-build time.
+    """
+    backend = canonical_backend(backend)
+    V = np.asarray(getattr(net, "V", net), np.float32)
+    N, s, _ = V.shape
+    g = np.asarray(gamma, np.int32)
+    if g.ndim == 0:
+        g = np.full((N,), g, np.int32)
+    if g.shape != (N,):
+        raise ValueError(f"gamma must be scalar or ({N},), got {g.shape}")
+    if (g < 0).any():
+        raise ValueError(f"gamma must be >= 0 rounds, got {g.tolist()}")
+    W = None
+    if backend == "fused_power":
+        W = jnp.asarray(
+            np.stack([np.linalg.matrix_power(V[c], int(g[c]))
+                      for c in range(N)]), jnp.float32)
+    return MixingPlan(backend=backend, num_clusters=N, cluster_size=s,
+                      V=jnp.asarray(V), gamma=jnp.asarray(g), W=W)
+
+
+__all__ = ["BACKENDS", "MixingPlan", "build_mixing_plan",
+           "canonical_backend", "matrix_powers", "mix", "mix_pytree"]

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import TTHFConfig, TopologyConfig
 from repro.core import consensus as cns
+from repro.core import mixing
 from repro.core import sampling as smp
 from repro.core.energy import CommLedger
 from repro.core.schedule import adaptive_gamma, fixed_gamma, make_lr_schedule
@@ -62,7 +63,7 @@ class TTHFTrainer:
                  topo_cfg: TopologyConfig, algo: TTHFConfig,
                  batch_size: int = 16, eval_x: np.ndarray | None = None,
                  eval_y: np.ndarray | None = None,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, backend: str | None = None):
         assert data.num_devices == topo_cfg.num_devices
         self.model = model
         self.data = data
@@ -70,6 +71,12 @@ class TTHFTrainer:
         self.net: Network = build_network(topo_cfg)
         self.batch_size = batch_size
         self.use_kernel = use_kernel
+        # consensus backend (core/mixing.py): gamma is traced inside the
+        # jitted consensus (Remark-1 adaptive rounds), so the default is
+        # the masked bounded loop; use_kernel routes through Pallas.
+        if backend is None:
+            backend = "pallas" if use_kernel else "masked_loop"
+        self.backend = mixing.canonical_backend(backend)
         self.eta = make_lr_schedule(algo)
         self.ledger = CommLedger()
         self.x = jnp.asarray(data.x)
@@ -116,8 +123,9 @@ class TTHFTrainer:
         return jax.vmap(dev_step)(params, keys, self.x, self.y)
 
     def _consensus_impl(self, params, gamma):
-        return cns.mix_pytree(params, self.V, gamma, self.net.num_clusters,
-                              use_kernel=self.use_kernel)
+        return mixing.mix_pytree(params, self.V, gamma,
+                                 self.net.num_clusters,
+                                 backend=self.backend)
 
     def _aggregate_impl(self, params, key, full: bool):
         if full:

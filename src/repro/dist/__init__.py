@@ -1,0 +1,10 @@
+"""``repro.dist`` — the logical-axis sharding layer (DESIGN.md §2).
+
+Owns the mapping from model-declared logical axes to physical mesh
+axes.  Model code imports :func:`hint`; step builders and TT-HF scale
+mode build :class:`ShardingRules` tables; vmapped replica losses mask
+the replica axes with :func:`drop_hint_axes`.
+"""
+from repro.dist.sharding import ShardingRules, drop_hint_axes, hint
+
+__all__ = ["ShardingRules", "drop_hint_axes", "hint"]

@@ -1,0 +1,192 @@
+"""Logical-axis sharding layer (DESIGN.md §2).
+
+Model code names *logical* axes ("embed", "ffn", "cache_seq", ...);
+this module owns the mapping onto *physical* mesh axes so that the
+§Perf hillclimb can re-shard a phase by editing one rule table instead
+of touching model code.
+
+Three pieces:
+
+* :class:`ShardingRules` — an ordered ``logical axis -> mesh axes``
+  table.  ``rules.spec(axes, mesh)`` resolves a per-dimension tuple of
+  logical names into a :class:`~jax.sharding.PartitionSpec`, silently
+  dropping mesh axes the target mesh does not have (the same table
+  serves the 256-chip single-pod and the 512-chip multi-pod mesh) and
+  resolving duplicate-mesh-axis conflicts left-to-right (a mesh axis
+  may shard at most one dimension of an array; the leftmost dimension
+  that claims it wins).
+
+* :func:`hint` — a ``with_sharding_constraint`` wrapper taking one
+  *physical* spec entry per array dimension.  It is a no-op when no
+  mesh is active (unit tests, simulation mode, CPU), so model code can
+  hint unconditionally.
+
+* :func:`drop_hint_axes` — a context manager that masks the named mesh
+  axes out of every ``hint`` issued underneath it.  TT-HF scale mode
+  uses it around the vmapped replica loss: the replica axes
+  ``("pod", "data")`` are carried by the vmap dimension there, so the
+  in-model batch hints must not re-claim them (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Iterable, Optional, Union
+
+import jax
+from jax.interpreters import pxla
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# one rule value: this logical axis is unsharded (None), sharded over
+# one mesh axis ("model"), or sharded over several ( ("pod", "data") ).
+MeshAxes = Union[None, str, tuple]
+
+
+def _as_tuple(entry: MeshAxes) -> tuple:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def _dim_entry(axes: tuple) -> Union[None, str, tuple]:
+    """Canonical PartitionSpec entry for a resolved mesh-axis tuple."""
+    if not axes:
+        return None
+    if len(axes) == 1:
+        return axes[0]
+    return tuple(axes)
+
+
+class ShardingRules:
+    """Ordered, immutable ``logical axis -> mesh axes`` rule table."""
+
+    def __init__(self, rules: Iterable[tuple]):
+        table = []
+        seen = set()
+        for name, entry in rules:
+            if name in seen:
+                raise ValueError(f"duplicate rule for logical axis {name!r}")
+            seen.add(name)
+            table.append((name, _as_tuple(entry)))
+        self._rules = tuple(table)
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def rules(self) -> tuple:
+        return self._rules
+
+    def logical_axes(self) -> tuple:
+        return tuple(name for name, _ in self._rules)
+
+    def mesh_axes(self, logical: str) -> tuple:
+        for name, entry in self._rules:
+            if name == logical:
+                return entry
+        raise KeyError(
+            f"no sharding rule for logical axis {logical!r}; known axes: "
+            f"{self.logical_axes()}")
+
+    # -- derivation -------------------------------------------------------
+    def with_overrides(self, **overrides: MeshAxes) -> "ShardingRules":
+        """New table with the named rules remapped in place (order kept);
+        logical axes not previously present are appended."""
+        pending = {k: _as_tuple(v) for k, v in overrides.items()}
+        out = []
+        for name, entry in self._rules:
+            out.append((name, pending.pop(name, entry)))
+        out.extend(pending.items())
+        return ShardingRules(out)
+
+    # -- resolution -------------------------------------------------------
+    def spec(self, axes: tuple, mesh: Mesh) -> P:
+        """Resolve per-dimension logical names into a PartitionSpec.
+
+        ``axes``: one entry per array dimension — a logical axis name or
+        None (dimension unconstrained).  Mesh axes absent from ``mesh``
+        are dropped; a mesh axis already claimed by an earlier dimension
+        is dropped from later ones (leftmost dimension wins).
+        """
+        present = set(mesh.axis_names)
+        used: set = set()
+        dims = []
+        for a in axes:
+            if a is None:
+                dims.append(None)
+                continue
+            take = tuple(m for m in self.mesh_axes(a)
+                         if m in present and m not in used)
+            used.update(take)
+            dims.append(_dim_entry(take))
+        return P(*dims)
+
+
+# ---------------------------------------------------------------------------
+# activation hints
+# ---------------------------------------------------------------------------
+
+_local = threading.local()
+
+
+def _dropped_axes() -> frozenset:
+    return getattr(_local, "dropped", frozenset())
+
+
+@contextmanager
+def drop_hint_axes(axes: Iterable[str]):
+    """Mask ``axes`` out of every :func:`hint` in this context.
+
+    Nestable: inner contexts add to (never replace) the outer drop set.
+    """
+    prev = _dropped_axes()
+    _local.dropped = prev | frozenset(axes)
+    try:
+        yield
+    finally:
+        _local.dropped = prev
+
+
+def _ambient_mesh() -> Optional[Mesh]:
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def resolve_hint_spec(dim_specs: tuple, mesh: Mesh) -> Optional[P]:
+    """The PartitionSpec a :func:`hint` would pin on ``mesh`` right now
+    (honoring the active :func:`drop_hint_axes` set), or None when every
+    entry resolves empty (the hint is a no-op)."""
+    present = set(mesh.axis_names)
+    dropped = _dropped_axes()
+    used: set = set()
+    dims = []
+    for entry in dim_specs:
+        take = tuple(m for m in _as_tuple(entry)
+                     if m in present and m not in dropped and m not in used)
+        used.update(take)
+        dims.append(_dim_entry(take))
+    return P(*dims) if used else None
+
+
+def hint(x: jax.Array, *dim_specs: MeshAxes) -> jax.Array:
+    """Pin ``x``'s sharding: one mesh-axes entry per array dimension.
+
+    No-op when no mesh is active.  Entries naming mesh axes the active
+    mesh lacks, axes masked by :func:`drop_hint_axes`, or axes already
+    claimed by an earlier dimension are dropped (never an error), so a
+    single call site serves every mesh and the vmapped replica path.
+    """
+    if len(dim_specs) != x.ndim:
+        raise ValueError(
+            f"hint got {len(dim_specs)} axis entries for a {x.ndim}-d "
+            f"array of shape {x.shape}")
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_hint_spec(dim_specs, mesh)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+__all__ = ["ShardingRules", "hint", "drop_hint_axes", "resolve_hint_spec"]

@@ -10,7 +10,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import consensus_mix as _cm
 from repro.kernels import fused_sgd as _fs
 from repro.kernels import ssd_scan as _ss
 from repro.kernels import ref
@@ -21,7 +20,10 @@ INTERPRET = True
 
 def consensus_mix(z: jax.Array, V: jax.Array, gamma: jax.Array,
                   blk_m: int = 512) -> jax.Array:
-    return _cm.consensus_mix(z, V, gamma, blk_m=blk_m, interpret=INTERPRET)
+    """D2D mixing via the unified engine's Pallas backend
+    (``repro.core.mixing``; honors this module's INTERPRET flag)."""
+    from repro.core import mixing
+    return mixing.mix(z, V, gamma, backend="pallas", blk_m=blk_m)
 
 
 def ssd_scan(x: jax.Array, dt: jax.Array, loga: jax.Array, B: jax.Array,

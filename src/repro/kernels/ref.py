@@ -11,15 +11,19 @@ def consensus_mix_ref(z: jax.Array, V: jax.Array,
     """z: (N, s, M); V: (N, s, s); gamma: (N,) int32 -> V_c^{gamma_c} z_c.
 
     Reference: explicit per-round einsum with per-cluster masking.
+    gamma must be CONCRETE (the loop unrolls in Python) — it is read
+    through numpy so the oracle also works on constants inside a jit
+    trace; traced gamma raises TracerArrayConversionError.
     """
-    gamma = jnp.asarray(gamma, jnp.int32)
-    max_gamma = int(jnp.max(gamma)) if gamma.size else 0
+    import numpy as np
+    gamma = np.asarray(gamma, np.int32)
+    max_gamma = int(gamma.max()) if gamma.size else 0
 
     out = z.astype(jnp.float32)
     Vf = V.astype(jnp.float32)
     for r in range(max_gamma):
         mixed = jnp.einsum("nij,njm->nim", Vf, out)
-        keep = (r < gamma)[:, None, None]
+        keep = jnp.asarray((r < gamma)[:, None, None])
         out = jnp.where(keep, mixed, out)
     return out.astype(z.dtype)
 

@@ -1,0 +1,116 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+This container has no network access, so ``hypothesis`` may be absent;
+property tests should still *run* (not skip) with reduced example
+budgets.  The shim covers exactly the API surface the test suite uses:
+
+  * ``given(**kwargs)`` with keyword strategies
+  * ``settings(max_examples=..., deadline=...)``
+  * ``strategies.integers / floats / sampled_from``
+
+Example generation is seeded and boundary-biased (endpoints first, then
+uniform draws), so failures reproduce exactly.  When the real
+``hypothesis`` is importable, ``install()`` is a no-op and the genuine
+library is used — see ``conftest.py``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+# cap shim runs so the fallback suite stays fast on the 1-core CI box;
+# real hypothesis (when installed) honors the tests' own max_examples
+MAX_EXAMPLES_CAP = 12
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random, index: int):
+        return self._draw(rng, index)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    def draw(rng, i):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rng.randint(min_value, max_value)
+    return _Strategy(draw)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    def draw(rng, i):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rng.uniform(min_value, max_value)
+    return _Strategy(draw)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+
+    def draw(rng, i):
+        if i < len(elements):
+            return elements[i]
+        return rng.choice(elements)
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = 10, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_fallback_max_examples", 10), MAX_EXAMPLES_CAP)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(f"repro:{fn.__name__}")
+            for i in range(max(n, 1)):
+                drawn = {k: s.draw(rng, i) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution (it inspects the signature; remaining params — e.g.
+        # pytest.mark.parametrize args — still pass through)
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+    return deco
+
+
+def install() -> bool:
+    """Register the shim as ``hypothesis`` if the real one is missing.
+
+    Returns True when the shim was installed."""
+    try:
+        import hypothesis  # noqa: F401
+        return False
+    except ModuleNotFoundError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.__is_repro_fallback__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.sampled_from = sampled_from
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return True

@@ -1,9 +1,17 @@
 """Shared fixtures. NOTE: tests run on the single real CPU device —
 the 512-device production mesh lives ONLY in launch/dryrun.py."""
 import os
+import sys
 
 # determinism + keep hypothesis/jax quiet on this 1-core box
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# `hypothesis` is optional (requirements-dev.txt): when absent, install
+# a deterministic shim so property tests still run (reduced budgets)
+sys.path.insert(0, os.path.dirname(__file__))
+from _hypothesis_fallback import install as _install_hypothesis_fallback
+
+HYPOTHESIS_IS_FALLBACK = _install_hypothesis_fallback()
 
 import numpy as np
 import pytest

@@ -1,0 +1,157 @@
+"""Unified mixing engine: all four backends must be the SAME operator.
+
+Property: ``reference == masked_loop == pallas(interpret) ==
+fused_power`` on random (N, s, M) stacks with *vector* per-cluster
+gamma (including gamma = 0 and heterogeneous Remark-1 round counts),
+plus plan-level invariants (build-time W precompute, alias resolution,
+pytree routing, traced-gamma support)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing
+from repro.core.topology import (
+    build_network, geometric_adjacency, metropolis_weights, ring_adjacency,
+)
+from repro.configs.base import TopologyConfig
+
+PARITY_TOL = 1e-5
+
+
+def _stack(N, s, M, seed):
+    rng = np.random.default_rng(seed)
+    V = jnp.asarray(
+        np.stack([metropolis_weights(geometric_adjacency(s, 0.8, rng))
+                  for _ in range(N)]), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
+    return z, V, rng
+
+
+@given(seed=st.integers(0, 100), gmax=st.integers(1, 9),
+       M=st.sampled_from([1, 17, 96, 513]))
+@settings(max_examples=15, deadline=None)
+def test_backend_parity_heterogeneous_gamma(seed, gmax, M):
+    N, s = 4, 5
+    z, V, rng = _stack(N, s, M, seed)
+    # heterogeneous per-cluster rounds, always including a 0 (aperiodic
+    # Remark-1 calendar: some clusters skip the event entirely)
+    gamma = rng.integers(0, gmax + 1, size=(N,))
+    gamma[rng.integers(0, N)] = 0
+    gamma = jnp.asarray(gamma, jnp.int32)
+
+    outs = {b: np.asarray(mixing.mix(z, V, gamma, backend=b))
+            for b in mixing.BACKENDS}
+    ref = outs["reference"]
+    for b in ("masked_loop", "pallas", "fused_power"):
+        np.testing.assert_allclose(
+            outs[b], ref, atol=PARITY_TOL,
+            err_msg=f"backend {b} diverged from reference")
+
+
+@pytest.mark.parametrize("backend", mixing.BACKENDS)
+def test_gamma_zero_is_identity(backend):
+    z, V, _ = _stack(3, 4, 23, 7)
+    out = mixing.mix(z, V, jnp.zeros((3,), jnp.int32), backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(z), atol=1e-7)
+
+
+@pytest.mark.parametrize("backend", mixing.BACKENDS)
+def test_scalar_gamma_broadcasts(backend):
+    z, V, _ = _stack(2, 5, 31, 3)
+    a = mixing.mix(z, V, 3, backend=backend)
+    b = mixing.mix(z, V, jnp.full((2,), 3, jnp.int32), backend=backend)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_traced_gamma_backends_under_jit():
+    """masked_loop / pallas / fused_power accept TRACED gamma (the
+    Remark-1 adaptive path); reference raises a clear error."""
+    z, V, _ = _stack(2, 4, 16, 11)
+    gamma = jnp.asarray([2, 5], jnp.int32)
+    expect = np.asarray(mixing.mix(z, V, gamma, backend="reference"))
+    for b in ("masked_loop", "pallas", "fused_power"):
+        out = jax.jit(lambda g, b=b: mixing.mix(z, V, g, backend=b))(gamma)
+        np.testing.assert_allclose(np.asarray(out), expect, atol=PARITY_TOL)
+    with pytest.raises((ValueError, jax.errors.ConcretizationTypeError)):
+        jax.jit(lambda g: mixing.mix(z, V, g, backend="reference"))(gamma)
+
+
+def test_matrix_powers_matches_numpy():
+    _, V, _ = _stack(3, 5, 1, 5)
+    gamma = jnp.asarray([0, 2, 6], jnp.int32)
+    W = np.asarray(mixing.matrix_powers(V, gamma))
+    for c, g in enumerate(np.asarray(gamma)):
+        np.testing.assert_allclose(
+            W[c], np.linalg.matrix_power(np.asarray(V)[c], int(g)),
+            atol=1e-6)
+
+
+def test_plan_precomputes_w_and_matches_reference():
+    net = build_network(TopologyConfig(num_devices=12, num_clusters=3,
+                                       graph="ring"))
+    gamma = np.asarray([1, 0, 4], np.int32)
+    plan = mixing.build_mixing_plan(net, gamma, backend="fused_power")
+    assert plan.W is not None and plan.W.shape == (3, 4, 4)
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(3, 4, 29)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(plan.apply(z)),
+        np.asarray(mixing.mix(z, jnp.asarray(net.V), gamma,
+                              backend="reference")),
+        atol=PARITY_TOL)
+
+
+def test_plan_apply_pytree_and_noop():
+    net = build_network(TopologyConfig(num_devices=8, num_clusters=2,
+                                       graph="ring"))
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.asarray(rng.normal(size=(8, 3, 2)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(8, 5)), jnp.float32)}
+    noop = mixing.build_mixing_plan(net, 0, backend="fused_power")
+    assert noop.is_noop
+    assert noop.apply_pytree(params) is params
+    plan = mixing.build_mixing_plan(net, [2, 3], backend="pallas")
+    out = plan.apply_pytree(params)
+    for k, leaf in params.items():
+        flat = leaf.reshape(2, 4, -1)
+        expect = mixing.mix(flat, jnp.asarray(net.V),
+                            jnp.asarray([2, 3], jnp.int32),
+                            backend="reference").reshape(leaf.shape)
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(expect),
+                                   atol=PARITY_TOL)
+
+
+def test_backend_aliases():
+    assert mixing.canonical_backend("fused") == "fused_power"
+    assert mixing.canonical_backend("rounds") == "reference"
+    assert mixing.canonical_backend("kernel") == "pallas"
+    assert mixing.canonical_backend("masked_loop") == "masked_loop"
+    with pytest.raises(ValueError):
+        mixing.canonical_backend("warp_drive")
+
+
+def test_bf16_roundtrip_keeps_dtype():
+    z, V, _ = _stack(2, 4, 64, 9)
+    zb = z.astype(jnp.bfloat16)
+    for b in mixing.BACKENDS:
+        out = mixing.mix(zb, V, jnp.asarray([1, 3], jnp.int32), backend=b)
+        assert out.dtype == jnp.bfloat16, b
+
+
+def test_consensus_event_accepts_vector_gamma():
+    """Scale mode now takes per-cluster aperiodic Gamma_c (Remark 1)."""
+    from repro.core.distributed import consensus_event
+    net = build_network(TopologyConfig(num_devices=8, num_clusters=2,
+                                       graph="ring"))
+    rng = np.random.default_rng(2)
+    params = {"w": jnp.asarray(rng.normal(size=(8, 6)), jnp.float32)}
+    gamma = np.asarray([0, 3], np.int32)
+    fused = consensus_event(params, net, gamma, "fused")
+    rounds = consensus_event(params, net, gamma, "rounds")
+    np.testing.assert_allclose(np.asarray(fused["w"]),
+                               np.asarray(rounds["w"]), atol=PARITY_TOL)
+    # cluster 0 (gamma=0) untouched
+    np.testing.assert_allclose(np.asarray(fused["w"][:4]),
+                               np.asarray(params["w"][:4]), atol=1e-7)
