@@ -1,0 +1,76 @@
+"""Netsim scenario sweep: convergence + energy/delay per scenario.
+
+Runs the Sec.-IV simulation under every registry scenario
+(``repro.netsim.scenarios``) with identical model/data/topology/
+schedule, and records the full trajectories — loss/accuracy at each
+eval point plus the priced communication energy and straggler-aware
+delay — to ``BENCH_dynamics.json``. The ``static`` row doubles as the
+regression anchor: it must match the historical (pre-netsim)
+trajectory exactly.
+
+Row ``derived`` format (CSV-safe, '|' separated trajectories):
+  final_loss=..;final_acc=..;energy_J=..;delay_s=..;
+  ts=t1|t2|..;loss=l1|l2|..;uplinks=u1|u2|..
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row, append_trajectory, sim_world
+
+LR = 0.002
+E_RATIO = 0.1   # E_D2D / E_Glob (the 5G-ish operating point [17])
+D_RATIO = 0.1
+
+
+def _traj(vals, fmt="{:.4f}") -> str:
+    return "|".join(fmt.format(v) for v in vals)
+
+
+def run(scale: str = "ci", seed: int = 0) -> list[Row]:
+    from repro.configs import TTHFConfig
+    from repro.core import TTHFTrainer
+    from repro.netsim import scenarios
+
+    data, topo, model, steps = sim_world(scale, seed)
+    steps = steps if scale == "paper" else 100
+    algo = TTHFConfig(tau=20, consensus_every=5, gamma_d2d=2,
+                      constant_lr=LR)
+
+    rows = []
+    for name in scenarios.names():
+        dyn = scenarios.get(name, seed=seed)
+        tr = TTHFTrainer(model, data, topo, algo, batch_size=16,
+                         dynamics=dyn)
+        # single timed run (no warmup repeat: the ledger must count ONE
+        # trajectory's communication, and this is a convergence bench)
+        t0 = time.perf_counter()
+        _, hist = tr.run(steps=steps, eval_every=5, seed=seed)
+        us = (time.perf_counter() - t0) * 1e6
+        e = tr.ledger.energy(E_RATIO)
+        d = tr.ledger.delay(D_RATIO)
+        rows.append(Row(
+            f"dynamics/{name}", us,
+            f"final_loss={hist.global_loss[-1]:.4f};"
+            f"final_acc={hist.global_acc[-1]:.4f};"
+            f"energy_J={e:.3f};delay_s={d:.2f};"
+            f"uplinks={tr.ledger.uplinks};"
+            f"d2d_msgs={tr.ledger.d2d_msgs};"
+            f"straggler_extra_s="
+            f"{tr.ledger.straggler_uplink_extra:.2f}up+"
+            f"{tr.ledger.straggler_round_extra:.2f}rd;"
+            f"ts={_traj(hist.ts, '{:d}')};"
+            f"loss={_traj(hist.global_loss)};"
+            f"acc={_traj(hist.global_acc)};"
+            f"active={_traj(hist.active_devices, '{:d}')}"))
+
+    # claim rows: dynamics should cost, static should anchor
+    by = {r.name.split("/")[1]: r for r in rows}
+    static_loss = float(by["static"].derived.split(";")[0].split("=")[1])
+    churn_loss = float(by["device_churn"].derived.split(";")[0]
+                       .split("=")[1])
+    rows.append(Row("dynamics/claims", 0.0,
+                    f"static_final={static_loss:.4f};"
+                    f"churn_degrades={churn_loss >= static_loss - 0.02}"))
+    append_trajectory("dynamics", rows, scale)
+    return rows

@@ -14,7 +14,8 @@ import time
 import traceback
 
 SUITES = ("fig4_gamma", "fig5_tau", "fig6_energy", "theory_bound",
-          "kernel_bench", "scale_sync", "topology_ablation", "roofline")
+          "kernel_bench", "scale_sync", "topology_ablation", "roofline",
+          "dynamics_bench")
 
 
 def main(argv=None) -> int:

@@ -4,6 +4,7 @@ from __future__ import annotations
 from repro.configs.base import (
     ARCH_KINDS,
     INPUT_SHAPES,
+    DynamicsConfig,
     InputShape,
     ModelConfig,
     TopologyConfig,
@@ -53,6 +54,7 @@ def get_shape(name: str) -> InputShape:
 
 
 __all__ = [
-    "ARCHS", "ARCH_KINDS", "INPUT_SHAPES", "InputShape", "ModelConfig",
-    "TopologyConfig", "TrainConfig", "TTHFConfig", "get_arch", "get_shape",
+    "ARCHS", "ARCH_KINDS", "INPUT_SHAPES", "DynamicsConfig", "InputShape",
+    "ModelConfig", "TopologyConfig", "TrainConfig", "TTHFConfig",
+    "get_arch", "get_shape",
 ]

@@ -212,6 +212,54 @@ class TopologyConfig:
 
 
 @dataclass(frozen=True)
+class DynamicsConfig:
+    """Time-varying network dynamics (``repro.netsim``).
+
+    Describes the event processes the :class:`~repro.netsim.events.
+    EventStream` draws at each iteration t:
+
+    * per-edge 2-state Markov chains over the BASE D2D edges
+      (``p_link_fail`` = P(up -> down), ``p_link_recover`` =
+      P(down -> up), applied once per iteration);
+    * per-device churn Markov chains (``p_device_drop`` /
+      ``p_device_return``) — a dropped device neither trains, mixes,
+      uploads, nor receives broadcasts: it *holds* its parameters;
+    * stragglers: a fixed ``straggler_frac`` of devices drawn at
+      stream construction; each consensus/uplink involving one pays a
+      lognormal tail-delay multiplier ``1 + LogNormal(mu, sigma)``;
+    * flash crowd: a deterministic mass departure — ``flash_drop_frac``
+      of devices dark for ``t in [flash_at, flash_at+flash_duration)``.
+
+    The all-defaults config is *static* (every process degenerate) and
+    the trainers take the exact pre-netsim code path for it, so
+    ``static`` trajectories are bit-for-bit the historical ones.
+    """
+    name: str = "static"
+    # link dynamics (per base edge, per iteration)
+    p_link_fail: float = 0.0
+    p_link_recover: float = 1.0
+    # device churn (per device, per iteration)
+    p_device_drop: float = 0.0
+    p_device_return: float = 1.0
+    # stragglers
+    straggler_frac: float = 0.0
+    straggler_mu: float = 0.0        # lognormal location of the tail
+    straggler_sigma: float = 1.0     # lognormal scale of the tail
+    # flash crowd (deterministic window)
+    flash_at: int = 0
+    flash_duration: int = 0
+    flash_drop_frac: float = 0.0
+    seed: int = 0
+
+    @property
+    def is_static(self) -> bool:
+        """True iff no event process can ever fire."""
+        return (self.p_link_fail == 0.0 and self.p_device_drop == 0.0
+                and self.straggler_frac == 0.0
+                and (self.flash_duration == 0 or self.flash_drop_frac == 0.0))
+
+
+@dataclass(frozen=True)
 class TTHFConfig:
     """Algorithm 1 knobs + schedules (Sec. II-C, III)."""
     tau: int = 20                   # local model training interval length

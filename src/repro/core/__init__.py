@@ -6,15 +6,16 @@ from repro.core.topology import (
 )
 from repro.core.consensus import (
     mix, mix_once, mix_pytree, cluster_means, consensus_error,
-    divergence_upsilon,
+    divergence_upsilon, masked_divergence_upsilon,
 )
 from repro.core.mixing import (
     BACKENDS, MixingPlan, build_mixing_plan, canonical_backend,
-    matrix_powers,
+    masked_consensus_matrix, matrix_powers, refresh_matrices,
 )
 from repro.core.schedule import adaptive_gamma, fixed_gamma, make_lr_schedule
 from repro.core.sampling import (
-    sample_devices, sampled_global_model, sampled_global_pytree,
+    sample_devices, sample_devices_multi, sampled_global_model,
+    sampled_global_model_multi, sampled_global_pytree,
     full_global_pytree, broadcast_pytree,
 )
 from repro.core.theory import (
@@ -30,11 +31,12 @@ __all__ = [
     "spectral_radius", "check_assumption2", "ring_adjacency",
     "complete_adjacency", "geometric_adjacency",
     "mix", "mix_once", "mix_pytree", "cluster_means", "consensus_error",
-    "divergence_upsilon",
+    "divergence_upsilon", "masked_divergence_upsilon",
     "BACKENDS", "MixingPlan", "build_mixing_plan", "canonical_backend",
-    "matrix_powers",
+    "masked_consensus_matrix", "matrix_powers", "refresh_matrices",
     "adaptive_gamma", "fixed_gamma", "make_lr_schedule",
-    "sample_devices", "sampled_global_model", "sampled_global_pytree",
+    "sample_devices", "sample_devices_multi", "sampled_global_model",
+    "sampled_global_model_multi", "sampled_global_pytree",
     "full_global_pytree", "broadcast_pytree",
     "ProblemConstants", "check_theorem2_conditions", "theorem2_Z",
     "theorem2_nu", "bound_curve", "lemma1_bound", "dispersion_bound",

@@ -82,3 +82,21 @@ def divergence_upsilon(z: jax.Array) -> jax.Array:
     """Definition 2: per-cluster max elementwise spread Upsilon_c.
     z: (N, s, M) -> (N,)."""
     return jnp.max(z.max(axis=1) - z.min(axis=1), axis=-1)
+
+
+def masked_divergence_upsilon(z: jax.Array, device_mask: jax.Array
+                              ) -> jax.Array:
+    """Definition-2 spread over the ACTIVE devices only (netsim churn).
+
+    Dropped devices hold stale parameters that cannot take part in the
+    coming consensus event, so they must not inflate the Remark-1
+    round count. Clusters with < 2 active devices have zero spread.
+    z: (N, s, M), device_mask: (N, s) -> (N,).
+    """
+    m = device_mask[..., None]
+    big = jnp.finfo(z.dtype).max
+    hi = jnp.max(jnp.where(m, z, -big), axis=1)
+    lo = jnp.min(jnp.where(m, z, big), axis=1)
+    spread = jnp.max(hi - lo, axis=-1)
+    enough = jnp.sum(device_mask, axis=1) >= 2
+    return jnp.where(enough, spread, 0.0)

@@ -97,9 +97,15 @@ def consensus_event(params, net: Network, gamma, mode: str = "fused"):
     return plan.apply_pytree(params)
 
 
-def sampled_aggregation(params, net: Network, picks: jax.Array):
-    """eq. (7): w_hat = sum_c varrho_c w_{n_c}; broadcast to all replicas."""
-    varrho = jnp.asarray(net.varrho, jnp.float32)
+def sampled_aggregation(params, net: Network, picks: jax.Array,
+                        varrho: Optional[jax.Array] = None):
+    """eq. (7): w_hat = sum_c varrho_c w_{n_c}; broadcast to all replicas.
+
+    ``varrho`` overrides the static cluster weights (netsim: the
+    event's availability-renormalized weights — a dark cluster's
+    substitute pick carries weight 0)."""
+    if varrho is None:
+        varrho = jnp.asarray(net.varrho, jnp.float32)
     N, s = net.num_clusters, net.cluster_size
 
     def one(leaf):
@@ -135,7 +141,7 @@ def full_aggregation(params, net: Network):
 
 def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
                          dtype=jnp.bfloat16, remat: bool = True,
-                         sync: str = "tthf"):
+                         sync: str = "tthf", refreshable: bool = False):
     """Returns step(params_R, batch, picks, step_idx) -> (params_R, loss).
 
     params_R: every leaf has leading replica axis R.
@@ -144,6 +150,17 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
     picks: (N,) int32 sampled representative per cluster.
     sync: "tthf" (Algorithm 1) | "star" (FedAvg: full participation,
     no D2D) | "local" (no sync at all — diagnostics).
+
+    ``refreshable=True`` (netsim dynamics): the step takes two extra
+    arguments — ``mix_refresh``, the per-aggregation-round consensus
+    matrices from :func:`repro.core.mixing.refresh_matrices` (the
+    stacked powers ``W = V^Gamma`` for the ``fused`` backend, the
+    masked ``V`` otherwise), and ``varrho_t``, the event's (N,)
+    availability-renormalized cluster weights (a dark cluster's
+    substitute pick aggregates with weight 0). The step is traced
+    once; each interval feeds the current event's matrices/weights, so
+    churned replicas hold their parameters through every consensus
+    event of that interval and never contribute to ``w_hat``.
     """
     net = scale.network()
     assert scale.tau % scale.consensus_every == 0
@@ -177,7 +194,7 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
             params, grads)
         return params, jnp.mean(losses)
 
-    def step(params, batch, picks, step_idx):
+    def interval(params, batch, picks, mix_refresh, varrho_t=None):
         lr = jnp.asarray(scale.lr, jnp.float32)
         # (tau, R, b, T) -> (blocks, consensus_every, R, b, T)
         def resh(x):
@@ -190,15 +207,23 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
                 return params, loss
             params, losses = jax.lax.scan(inner, params, block_batch)
             if plan is not None:
-                params = plan.apply_pytree(params)
+                params = plan.apply_pytree(params, refresh=mix_refresh)
             return params, jnp.mean(losses)
 
         params, block_losses = jax.lax.scan(block, params, batch_b)
         if sync == "tthf":
-            params = sampled_aggregation(params, net, picks)
+            params = sampled_aggregation(params, net, picks,
+                                         varrho=varrho_t)
         elif sync == "star":
             params = full_aggregation(params, net)
         return params, jnp.mean(block_losses)
+
+    if refreshable:
+        def step(params, batch, picks, step_idx, mix_refresh, varrho_t):
+            return interval(params, batch, picks, mix_refresh, varrho_t)
+    else:
+        def step(params, batch, picks, step_idx):
+            return interval(params, batch, picks, None)
 
     return step, net
 

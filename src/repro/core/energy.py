@@ -23,22 +23,47 @@ E_GLOB_J = DBM24_WATTS * DELTA_GLOB_S      # Joules per uplink transmission
 
 @dataclass
 class CommLedger:
-    """Counts communication events during a run."""
+    """Counts communication events during a run.
+
+    Straggler accounting (``repro.netsim``): the two ``straggler_*``
+    fields accumulate EXTRA uplink-equivalents / round-equivalents of
+    tail latency beyond the baseline — a consensus round at tail
+    multiplier m adds (m - 1) round-equivalents, an uplink from a
+    straggling device adds (m - 1) uplink-equivalents. They stay 0
+    without dynamics, so historical energy/delay numbers are unchanged.
+    Stragglers are slow, not chatty: the tail stretches ``delay`` but
+    moves no extra bits, so ``energy`` is untouched.
+    """
     uplinks: int = 0
     broadcasts: int = 0
     d2d_msgs: int = 0
     d2d_rounds: int = 0
     local_steps: int = 0
+    straggler_uplink_extra: float = 0.0   # uplink-equivalents of tail delay
+    straggler_round_extra: float = 0.0    # D2D-round-equivalents
 
-    def record_aggregation(self, devices_sampled: int) -> None:
+    def record_aggregation(self, devices_sampled: int,
+                           uplink_delay_mults=None) -> None:
+        """``uplink_delay_mults``: per-sampled-device tail multipliers
+        (>= 1); each uplink pays its own device's multiplier."""
         self.uplinks += devices_sampled
         self.broadcasts += 1
+        if uplink_delay_mults is not None:
+            for m in uplink_delay_mults:
+                self.straggler_uplink_extra += max(float(m) - 1.0, 0.0)
 
-    def record_consensus(self, rounds_per_cluster, edges_per_cluster) -> None:
-        """rounds/edges: iterables over clusters."""
-        for g, e in zip(rounds_per_cluster, edges_per_cluster):
+    def record_consensus(self, rounds_per_cluster, edges_per_cluster,
+                         tail_mult_per_cluster=None) -> None:
+        """rounds/edges: iterables over clusters. ``tail_mult_per_
+        cluster``: the slowest active participant's multiplier — every
+        round in that cluster completes at the tail's pace."""
+        for i, (g, e) in enumerate(zip(rounds_per_cluster,
+                                       edges_per_cluster)):
             self.d2d_rounds += int(g)
             self.d2d_msgs += int(g) * 2 * int(e)   # bidirectional
+            if tail_mult_per_cluster is not None:
+                mult = float(tail_mult_per_cluster[i])
+                self.straggler_round_extra += int(g) * max(mult - 1.0, 0.0)
 
     def record_local_step(self, devices: int = 1) -> None:
         self.local_steps += devices
@@ -54,7 +79,9 @@ class CommLedger:
 
         Uplinks are sequential per aggregation (the scarce-uplink premise);
         D2D rounds within a cluster run in parallel across devices but
-        rounds are sequential.
+        rounds are sequential. Straggler tails stretch both terms.
         """
         up = self.uplinks if sequential_uplinks else self.broadcasts
-        return up * delta_glob + self.d2d_rounds * d_ratio * delta_glob
+        up = up + self.straggler_uplink_extra
+        rounds = self.d2d_rounds + self.straggler_round_extra
+        return up * delta_glob + rounds * d_ratio * delta_glob

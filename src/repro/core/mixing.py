@@ -71,6 +71,29 @@ def _normalize_gamma(gamma: Any, num_clusters: int) -> jax.Array:
     return gamma
 
 
+def masked_consensus_matrix(V: jax.Array, device_mask: jax.Array) -> jax.Array:
+    """Drop devices from a consensus-matrix stack (netsim contract).
+
+    Zeroes the dropped devices' rows and columns and returns the
+    removed mass to each row's self-loop, so the result is still
+    symmetric and row-stochastic:
+
+      * dropped device i: row becomes e_i — a consensus step leaves
+        its parameters untouched;
+      * active device i: v'_ii = v_ii + sum_{j dropped} v_ij — it
+        mixes only among the remaining active devices.
+
+    V: (N, s, s); device_mask: (N, s) bool/0-1. Works under jit (the
+    mask may be traced) and commutes with powers: masking then raising
+    to Gamma keeps dropped rows identity.
+    """
+    m = device_mask.astype(V.dtype)
+    s = V.shape[-1]
+    eye = jnp.eye(s, dtype=V.dtype)
+    offdiag = V * (1.0 - eye) * m[:, :, None] * m[:, None, :]
+    return offdiag + (1.0 - offdiag.sum(-1))[..., None] * eye
+
+
 def matrix_powers(V: jax.Array, gamma: jax.Array) -> jax.Array:
     """In-graph stacked powers ``W_c = V_c^{gamma_c}``; (N, s, s).
 
@@ -133,15 +156,27 @@ def _mix_fused_power(z, V, gamma, W=None):
 
 def mix(z: jax.Array, V: jax.Array, gamma: Any, *,
         backend: str = "masked_loop", W: Optional[jax.Array] = None,
+        device_mask: Optional[jax.Array] = None,
         blk_m: int = 512) -> jax.Array:
     """Apply per-cluster consensus ``z_c <- V_c^{gamma_c} z_c``.
 
     z: (N, s, M); V: (N, s, s); gamma: scalar or (N,) int32.
     ``W`` (fused_power only): precomputed stacked powers; derived
     in-graph when omitted.
+    ``device_mask`` (N, s): drop devices via
+    :func:`masked_consensus_matrix` before dispatch — dropped rows hold
+    their values through every backend. Incompatible with a
+    precomputed ``W`` (powers must be taken AFTER masking).
     """
     backend = canonical_backend(backend)
     gamma = _normalize_gamma(gamma, z.shape[0])
+    if device_mask is not None:
+        if W is not None:
+            raise ValueError(
+                "device_mask with precomputed W is ambiguous: powers "
+                "must be taken after masking — pass V and let the "
+                "backend derive W, or precompute W from the masked V")
+        V = masked_consensus_matrix(V, device_mask)
     if backend == "reference":
         return _mix_reference(z, V, gamma)
     if backend == "masked_loop":
@@ -153,12 +188,21 @@ def mix(z: jax.Array, V: jax.Array, gamma: Any, *,
 
 def mix_pytree(params, V: jax.Array, gamma: Any, num_clusters: int, *,
                backend: str = "masked_loop",
-               W: Optional[jax.Array] = None):
+               W: Optional[jax.Array] = None,
+               device_mask: Optional[jax.Array] = None):
     """Consensus over a pytree whose leaves have leading axis I = N*s.
 
     Mixing is linear and elementwise across parameters, so each leaf is
     reshaped (I, ...) -> (N, s, M) and mixed independently.
+    ``device_mask``: see :func:`mix` — applied once, outside the
+    per-leaf loop.
     """
+    if device_mask is not None:
+        if W is not None:
+            raise ValueError(
+                "device_mask with precomputed W is ambiguous (see mix)")
+        V = masked_consensus_matrix(V, device_mask)
+
     def one(leaf):
         I = leaf.shape[0]
         s = I // num_clusters
@@ -191,16 +235,34 @@ class MixingPlan:
     def is_noop(self) -> bool:
         return bool(np.all(np.asarray(self.gamma) == 0))
 
-    def apply(self, z: jax.Array) -> jax.Array:
-        """z: (N, s, M) -> mixed (N, s, M)."""
-        return mix(z, self.V, self.gamma, backend=self.backend, W=self.W)
+    def _matrices(self, refresh: Optional[jax.Array]):
+        """Resolve (V, W) given an optional per-call refresh matrix.
 
-    def apply_pytree(self, params):
+        A refresh (from :func:`refresh_matrices`) is whatever the
+        backend consumes: the stacked powers W for ``fused_power``, the
+        (masked) consensus matrices V otherwise. It may be traced — the
+        netsim W-refresh path jits the step once and feeds new
+        matrices each aggregation round.
+        """
+        if refresh is None:
+            return self.V, self.W
+        if self.backend == "fused_power":
+            return self.V, refresh
+        return refresh, None
+
+    def apply(self, z: jax.Array,
+              refresh: Optional[jax.Array] = None) -> jax.Array:
+        """z: (N, s, M) -> mixed (N, s, M)."""
+        V, W = self._matrices(refresh)
+        return mix(z, V, self.gamma, backend=self.backend, W=W)
+
+    def apply_pytree(self, params, refresh: Optional[jax.Array] = None):
         """params: pytree with leading replica/device axis I = N*s."""
-        if self.is_noop:
+        if self.is_noop and refresh is None:
             return params
-        return mix_pytree(params, self.V, self.gamma, self.num_clusters,
-                          backend=self.backend, W=self.W)
+        V, W = self._matrices(refresh)
+        return mix_pytree(params, V, self.gamma, self.num_clusters,
+                          backend=self.backend, W=W)
 
 
 def build_mixing_plan(net, gamma: Any,
@@ -231,5 +293,29 @@ def build_mixing_plan(net, gamma: Any,
                       V=jnp.asarray(V), gamma=jnp.asarray(g), W=W)
 
 
+def refresh_matrices(plan: MixingPlan, V: Any,
+                     device_mask: Any = None) -> jax.Array:
+    """Host-side per-event matrices for ``MixingPlan.apply*(refresh=)``.
+
+    Takes the event's consensus-matrix stack (e.g. a netsim
+    ``NetworkSnapshot.V``), optionally drops devices, and returns what
+    the plan's backend consumes: exact numpy integer powers
+    ``W = V^Gamma`` for ``fused_power``, the (masked) ``V`` itself
+    otherwise. This is the scale-mode refresh path — the jitted step
+    stays compiled once while the matrices change per aggregation round.
+    """
+    Vn = np.asarray(V, np.float32)
+    if device_mask is not None:
+        Vn = np.asarray(masked_consensus_matrix(
+            jnp.asarray(Vn), jnp.asarray(device_mask)), np.float32)
+    if plan.backend != "fused_power":
+        return jnp.asarray(Vn)
+    g = np.asarray(plan.gamma, np.int32)
+    return jnp.asarray(
+        np.stack([np.linalg.matrix_power(Vn[c], int(g[c]))
+                  for c in range(Vn.shape[0])]), jnp.float32)
+
+
 __all__ = ["BACKENDS", "MixingPlan", "build_mixing_plan",
-           "canonical_backend", "matrix_powers", "mix", "mix_pytree"]
+           "canonical_backend", "masked_consensus_matrix",
+           "matrix_powers", "mix", "mix_pytree", "refresh_matrices"]

@@ -4,6 +4,12 @@ At t = t_k the server samples ONE device n_c uniformly from each cluster
 and forms  w_hat = sum_c varrho_c * w_{n_c}.  Unbiasedness w.r.t. the
 cluster means (used in Theorem 1's proof) holds because sampling is
 uniform and consensus keeps E[e_{n_c}] = 0.
+
+``sample_per_cluster > 1`` generalizes to k representatives drawn
+WITHOUT replacement and averaged within the cluster:
+w_hat = sum_c varrho_c * (1/k) sum_j w_{n_{c,j}} — still unbiased, with
+variance shrunk by the within-cluster averaging. The ledger bills
+exactly N * k uplinks, matching what is actually transmitted.
 """
 from __future__ import annotations
 
@@ -17,6 +23,24 @@ def sample_devices(key: jax.Array, num_clusters: int,
     return jax.random.randint(key, (num_clusters,), 0, cluster_size)
 
 
+def sample_devices_multi(key: jax.Array, num_clusters: int,
+                         cluster_size: int, k: int) -> jax.Array:
+    """(N, k) int32 — k DISTINCT local indices per cluster, uniform
+    without replacement (Gumbel-top-k: rank iid uniforms).
+
+    k == 1 delegates to :func:`sample_devices` so the historical
+    single-representative sampling stream is reproduced bit-for-bit.
+    """
+    if not 1 <= k <= cluster_size:
+        raise ValueError(
+            f"sample_per_cluster must be in [1, {cluster_size}], got {k}")
+    if k == 1:
+        return sample_devices(key, num_clusters, cluster_size)[:, None]
+    scores = jax.random.uniform(key, (num_clusters, cluster_size))
+    _, idx = jax.lax.top_k(scores, k)
+    return idx.astype(jnp.int32)
+
+
 def sampled_global_model(z: jax.Array, picks: jax.Array,
                          varrho: jax.Array) -> jax.Array:
     """z: (N, s, M), picks: (N,), varrho: (N,) -> (M,) the new w_hat."""
@@ -25,15 +49,30 @@ def sampled_global_model(z: jax.Array, picks: jax.Array,
     return jnp.einsum("c,cm->m", varrho.astype(z.dtype), chosen)
 
 
+def sampled_global_model_multi(z: jax.Array, picks: jax.Array,
+                               varrho: jax.Array) -> jax.Array:
+    """z: (N, s, M), picks: (N, k) -> (M,): varrho-weighted mean of the
+    per-cluster averages of the k sampled representatives."""
+    chosen = jnp.take_along_axis(
+        z, picks[..., None].astype(jnp.int32), axis=1)      # (N, k, M)
+    k = picks.shape[1]
+    return jnp.einsum("c,ckm->m", varrho.astype(z.dtype) / k, chosen)
+
+
 def sampled_global_pytree(params, picks: jax.Array, varrho: jax.Array,
                           num_clusters: int):
     """Pytree version: leaves (I, ...) -> global model leaves (...)
-    broadcast back by the caller."""
+    broadcast back by the caller. ``picks`` may be (N,) — one
+    representative, the paper's eq. (7) — or (N, k) for averaged
+    multi-device sampling."""
     def one(leaf):
         I = leaf.shape[0]
         s = I // num_clusters
         z = leaf.reshape(num_clusters, s, -1)
-        g = sampled_global_model(z, picks, varrho)
+        if picks.ndim == 1:
+            g = sampled_global_model(z, picks, varrho)
+        else:
+            g = sampled_global_model_multi(z, picks, varrho)
         return g.reshape(leaf.shape[1:])
     return jax.tree.map(one, params)
 

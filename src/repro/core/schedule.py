@@ -24,18 +24,27 @@ def make_lr_schedule(cfg) -> callable:
 
 
 def adaptive_gamma(eta_t: jax.Array, phi: float, upsilon: jax.Array,
-                   lambdas: jax.Array, cluster_size: int,
+                   lambdas: jax.Array, cluster_size,
                    model_dim: int, max_rounds: int = 64) -> jax.Array:
-    """Remark-1 D2D round counts. upsilon, lambdas: (N,) -> (N,) int32."""
+    """Remark-1 D2D round counts. upsilon, lambdas: (N,) -> (N,) int32.
+
+    ``cluster_size`` may be a scalar (the static s_c) or an (N,) vector
+    of per-cluster ACTIVE device counts (netsim churn): the Lemma-1
+    prefactor then tracks the devices that actually mix, and a cluster
+    with <= 1 active device runs 0 rounds — there is nobody to
+    exchange with, so any Gamma would be wasted energy.
+    """
     target = eta_t * phi
+    sizes = jnp.asarray(cluster_size)
     # Lemma-1 prefactor s_c * Upsilon_c * M
-    pref = cluster_size * upsilon * model_dim
+    pref = sizes * upsilon * model_dim
     safe_pref = jnp.maximum(pref, 1e-30)
     ratio = jnp.clip(target / safe_pref, 1e-30, None)
     # lambda^Gamma <= ratio  =>  Gamma >= log(ratio)/log(lambda)
     need = jnp.log(ratio) / jnp.log(jnp.clip(lambdas, 1e-6, 1 - 1e-9))
     gamma = jnp.ceil(need).astype(jnp.int32)
     gamma = jnp.where(pref <= target, 0, gamma)   # already within target
+    gamma = jnp.where(sizes <= 1, 0, gamma)       # isolated: nobody to mix
     return jnp.clip(gamma, 0, max_rounds)
 
 

@@ -13,6 +13,7 @@ Weights satisfy Assumption 2: (i) sparsity matches E_c, (ii) row sums 1,
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -40,15 +41,30 @@ def complete_adjacency(s: int) -> np.ndarray:
 
 
 def geometric_adjacency(s: int, radius: float,
-                        rng: np.random.Generator) -> np.ndarray:
-    """Random geometric graph in the unit square; re-draws until connected."""
+                        rng: np.random.Generator,
+                        fallback_counter: list | None = None) -> np.ndarray:
+    """Random geometric graph in the unit square; re-draws until connected.
+
+    If 200 draws never produce a connected graph (the radius is too
+    small for s points) we fall back to a ring — which is NOT a
+    geometric graph and has a very different spectral radius, so the
+    fallback is loud: a ``RuntimeWarning`` is emitted and, when the
+    caller passes a ``fallback_counter`` list, an entry is appended so
+    :func:`build_network` can surface the count on the
+    :class:`Network` (``geometric_fallbacks``)."""
     for _ in range(200):
         pts = rng.random((s, 2))
         d = np.linalg.norm(pts[:, None] - pts[None, :], axis=-1)
         a = (d < radius) & ~np.eye(s, dtype=bool)
         if _connected(a):
             return a
-    # fall back: ring is always connected
+    warnings.warn(
+        f"geometric_adjacency: no connected graph in 200 draws "
+        f"(s={s}, radius={radius:.3f}); falling back to a ring — the "
+        f"tuned spectral radius will NOT match the geometric target",
+        RuntimeWarning, stacklevel=2)
+    if fallback_counter is not None:
+        fallback_counter.append((s, radius))
     return ring_adjacency(s)
 
 
@@ -125,6 +141,11 @@ class Network:
     lambdas: np.ndarray
     num_clusters: int
     cluster_size: int
+    # how many clusters of the CHOSEN adjacency set came from the
+    # ring fallback of geometric_adjacency (0 for non-geometric graphs
+    # and healthy geometric draws) — experiments can detect a corrupted
+    # spectral-radius tuning instead of silently trusting it
+    geometric_fallbacks: int = 0
 
     @property
     def num_devices(self) -> int:
@@ -154,13 +175,14 @@ def build_network(cfg: TopologyConfig) -> Network:
     rng = np.random.default_rng(cfg.seed)
     N, s = cfg.num_clusters, cfg.cluster_size
 
+    fallbacks = 0
     if cfg.graph == "ring":
         adjs = np.stack([ring_adjacency(s) for _ in range(N)])
     elif cfg.graph == "complete":
         adjs = np.stack([complete_adjacency(s) for _ in range(N)])
     elif cfg.graph == "geometric":
-        adjs = _tuned_geometric(N, s, cfg.target_spectral_radius,
-                                cfg.weights, rng)
+        adjs, fallbacks = _tuned_geometric(N, s, cfg.target_spectral_radius,
+                                           cfg.weights, rng)
     else:
         raise ValueError(f"unknown graph {cfg.graph!r}")
 
@@ -169,32 +191,38 @@ def build_network(cfg: TopologyConfig) -> Network:
         check_assumption2(v, a)
     lambdas = np.array([spectral_radius(v) for v in V])
     return Network(V=V.astype(np.float32), adj=adjs, lambdas=lambdas,
-                   num_clusters=N, cluster_size=s)
+                   num_clusters=N, cluster_size=s,
+                   geometric_fallbacks=fallbacks)
 
 
 def _tuned_geometric(N: int, s: int, target: float, scheme: str,
-                     rng: np.random.Generator) -> np.ndarray:
+                     rng: np.random.Generator) -> tuple[np.ndarray, int]:
     """Bisection on the connection radius to match the average spectral
     radius (paper: 'tuned such that clusters have an average spectral
-    radius of rho = 0.7')."""
+    radius of rho = 0.7'). Returns (adjacencies, ring-fallback count
+    among the CHOSEN adjacencies)."""
     lo, hi = 0.3, 1.5   # radius range: sparse ... complete
 
-    def avg_rho(radius: float, trial_rng) -> tuple[float, np.ndarray]:
-        adjs = np.stack([geometric_adjacency(s, radius, trial_rng)
+    def avg_rho(radius: float, trial_rng
+                ) -> tuple[float, np.ndarray, int]:
+        counter: list = []
+        adjs = np.stack([geometric_adjacency(s, radius, trial_rng,
+                                             fallback_counter=counter)
                          for _ in range(N)])
         rhos = [spectral_radius(_weights_for(a, scheme)) for a in adjs]
-        return float(np.mean(rhos)), adjs
+        return float(np.mean(rhos)), adjs, len(counter)
 
-    best_adjs, best_err = None, np.inf
+    best_adjs, best_err, best_fb = None, np.inf, 0
     for _ in range(12):
         mid = 0.5 * (lo + hi)
-        rho, adjs = avg_rho(mid, np.random.default_rng(rng.integers(2**31)))
+        rho, adjs, fb = avg_rho(mid,
+                                np.random.default_rng(rng.integers(2**31)))
         err = abs(rho - target)
         if err < best_err:
-            best_err, best_adjs = err, adjs
+            best_err, best_adjs, best_fb = err, adjs, fb
         # denser graph (larger radius) -> faster mixing -> smaller rho
         if rho > target:
             lo = mid
         else:
             hi = mid
-    return best_adjs
+    return best_adjs, best_fb

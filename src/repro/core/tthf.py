@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import TTHFConfig, TopologyConfig
+from repro.configs.base import DynamicsConfig, TTHFConfig, TopologyConfig
 from repro.core import consensus as cns
 from repro.core import mixing
 from repro.core import sampling as smp
@@ -51,6 +51,7 @@ class History:
     gamma_used: list = field(default_factory=list)
     uplinks: list = field(default_factory=list)
     d2d_msgs: list = field(default_factory=list)
+    active_devices: list = field(default_factory=list)   # netsim churn
 
     def as_arrays(self) -> dict[str, np.ndarray]:
         return {k: np.asarray(v) for k, v in dataclasses.asdict(self).items()}
@@ -63,14 +64,25 @@ class TTHFTrainer:
                  topo_cfg: TopologyConfig, algo: TTHFConfig,
                  batch_size: int = 16, eval_x: np.ndarray | None = None,
                  eval_y: np.ndarray | None = None,
-                 use_kernel: bool = False, backend: str | None = None):
+                 use_kernel: bool = False, backend: str | None = None,
+                 dynamics: Optional[DynamicsConfig] = None):
         assert data.num_devices == topo_cfg.num_devices
+        assert 1 <= algo.sample_per_cluster <= topo_cfg.cluster_size, \
+            "sample_per_cluster must be within the cluster size"
         self.model = model
         self.data = data
         self.algo = algo
         self.net: Network = build_network(topo_cfg)
         self.batch_size = batch_size
         self.use_kernel = use_kernel
+        # netsim dynamics: a static (or absent) config takes the exact
+        # historical code path below — bit-for-bit trajectories
+        self.dynamics = dynamics
+        self.tvnet = None
+        if dynamics is not None and not dynamics.is_static:
+            from repro.netsim.dynamics import TimeVaryingNetwork
+            self.tvnet = TimeVaryingNetwork(self.net, dynamics,
+                                            weights=topo_cfg.weights)
         # consensus backend (core/mixing.py): gamma is traced inside the
         # jitted consensus (Remark-1 adaptive rounds), so the default is
         # the masked bounded loop; use_kernel routes through Pallas.
@@ -95,6 +107,11 @@ class TTHFTrainer:
                                   static_argnames=("full",))
         self._eval = jax.jit(self._eval_impl)
         self._upsilon = jax.jit(self._upsilon_impl)
+        # dynamic-mode (netsim) variants: V / masks become call arguments
+        self._local_step_dyn = jax.jit(self._local_step_dyn_impl)
+        self._consensus_dyn = jax.jit(self._consensus_dyn_impl)
+        self._aggregate_dyn = jax.jit(self._aggregate_dyn_impl)
+        self._upsilon_dyn = jax.jit(self._upsilon_dyn_impl)
 
     # ------------------------------------------------------------------
     def init(self, seed: int = 0) -> TTHFState:
@@ -131,9 +148,17 @@ class TTHFTrainer:
         if full:
             g = smp.full_global_pytree(params, self.varrho,
                                        self.net.num_clusters)
-        else:
+        elif self.algo.sample_per_cluster == 1:
             picks = smp.sample_devices(key, self.net.num_clusters,
                                        self.net.cluster_size)
+            g = smp.sampled_global_pytree(params, picks, self.varrho,
+                                          self.net.num_clusters)
+        else:
+            # k representatives without replacement, averaged (eq. 7
+            # generalized) — the ledger's N * k uplinks are now real
+            picks = smp.sample_devices_multi(key, self.net.num_clusters,
+                                             self.net.cluster_size,
+                                             self.algo.sample_per_cluster)
             g = smp.sampled_global_pytree(params, picks, self.varrho,
                                           self.net.num_clusters)
         return g, smp.broadcast_pytree(g, self.data.num_devices)
@@ -161,6 +186,49 @@ class TTHFTrainer:
             ups.append(cns.divergence_upsilon(z))
         return jnp.max(jnp.stack(ups), axis=0)
 
+    # ------------------------------------------------------------------
+    # netsim (dynamic-mode) jitted pieces: the event's V / masks / agg
+    # weights arrive as call arguments so one compilation serves every
+    # event of a run
+    # ------------------------------------------------------------------
+    def _local_step_dyn_impl(self, params, key, eta_t, device_up_flat):
+        """Local SGD with churn: a dropped device is offline — it takes
+        no gradient step and simply holds its parameters."""
+        stepped = self._local_step_impl(params, key, eta_t)
+
+        def freeze(new, old):
+            m = device_up_flat.reshape((-1,) + (1,) * (old.ndim - 1))
+            return jnp.where(m, new, old)
+
+        return jax.tree.map(freeze, stepped, params)
+
+    def _consensus_dyn_impl(self, params, V, gamma):
+        return mixing.mix_pytree(params, V, gamma,
+                                 self.net.num_clusters,
+                                 backend=self.backend)
+
+    def _aggregate_dyn_impl(self, params, weights, device_up_flat):
+        """Availability-aware eq. (7): aggregate with per-device weights
+        (netsim.faults builders) and broadcast only to devices that are
+        up — offline devices cannot hear the server."""
+        from repro.netsim.faults import weighted_global_pytree
+        g = weighted_global_pytree(params, weights, self.net.num_clusters)
+        bcast = smp.broadcast_pytree(g, self.data.num_devices)
+
+        def receive(new, old):
+            m = device_up_flat.reshape((-1,) + (1,) * (old.ndim - 1))
+            return jnp.where(m, new, old)
+
+        return g, jax.tree.map(receive, bcast, params)
+
+    def _upsilon_dyn_impl(self, params, device_up):
+        """Definition-2 divergence over ACTIVE devices, max over leaves."""
+        ups = []
+        for leaf in jax.tree.leaves(params):
+            z = leaf.reshape(self.net.num_clusters, self.net.cluster_size, -1)
+            ups.append(cns.masked_divergence_upsilon(z, device_up))
+        return jnp.max(jnp.stack(ups), axis=0)
+
     def _dispersion(self, params):
         """A^(t) sample: sum_c varrho_c ||wbar_c - wbar||^2."""
         total = 0.0
@@ -183,6 +251,12 @@ class TTHFTrainer:
     def run(self, steps: int, seed: int = 0, eval_every: int = 5,
             state: TTHFState | None = None,
             record_dispersion: bool = True) -> tuple[TTHFState, History]:
+        """Drive Algorithm 1. With a non-static ``dynamics`` config the
+        netsim path runs instead; a static/absent config takes the
+        historical code path (bit-for-bit identical trajectories)."""
+        if self.tvnet is not None:
+            return self._run_dynamic(steps, seed, eval_every, state,
+                                     record_dispersion)
         st = state or self.init(seed)
         hist = History()
         algo = self.algo
@@ -227,6 +301,117 @@ class TTHFTrainer:
                 hist.gamma_used.append(gamma_used.copy())
                 hist.uplinks.append(self.ledger.uplinks)
                 hist.d2d_msgs.append(self.ledger.d2d_msgs)
+                hist.active_devices.append(self.data.num_devices)
+
+        st.t += steps
+        return st, hist
+
+    # ------------------------------------------------------------------
+    def _run_dynamic(self, steps: int, seed: int = 0, eval_every: int = 5,
+                     state: TTHFState | None = None,
+                     record_dispersion: bool = True
+                     ) -> tuple[TTHFState, History]:
+        """Algorithm 1 under time-varying network dynamics.
+
+        Per iteration the :class:`~repro.netsim.dynamics.
+        TimeVaryingNetwork` snapshot supplies the active topology:
+        dropped devices freeze (no SGD, no mixing, no uplink, no
+        broadcast), consensus mixes over the event's rebuilt ``V`` with
+        Remark-1 gammas driven by the event's component-wise lambdas
+        and the ACTIVE-device divergence, sampling draws only among
+        available devices with dark clusters renormalized away, and
+        stragglers stretch the ledger's delay. The JAX PRNG *key
+        schedule* is split exactly as in the static path, but sampling
+        draws go through a host-side generator seeded from the key, so
+        trajectories differ from the static path even under an all-up
+        event stream — bit-for-bit static reproduction comes from
+        ``run()`` routing static configs to the static path, not from
+        this loop.
+        """
+        from repro.netsim import faults
+
+        st = state or self.init(seed)
+        hist = History()
+        algo = self.algo
+        N, s = self.net.num_clusters, self.net.cluster_size
+        k = algo.sample_per_cluster
+
+        for t in range(st.t + 1, st.t + steps + 1):
+            eta_t = self.eta(t - 1)
+            st.key, k_step, k_agg = jax.random.split(st.key, 3)
+            snap = self.tvnet.snapshot(t)
+            up = jnp.asarray(snap.device_up)
+            up_flat = up.reshape(-1)
+            st.params = self._local_step_dyn(st.params, k_step, eta_t,
+                                             up_flat)
+            self.ledger.record_local_step(int(snap.device_up.sum()))
+
+            gamma_used = np.zeros((N,), np.int32)
+            if algo.is_consensus_step(t):
+                if algo.gamma_d2d >= 0:
+                    gamma = fixed_gamma(N, algo.gamma_d2d)
+                else:
+                    ups = self._upsilon_dyn(st.params, up)
+                    gamma = adaptive_gamma(
+                        eta_t, algo.phi, ups,
+                        jnp.asarray(snap.lambdas, jnp.float32),
+                        jnp.asarray(snap.active_per_cluster, jnp.int32),
+                        self.model_dim)
+                # clusters with no live edge have nothing to exchange:
+                # mixing there is the identity, so neither run nor bill
+                # rounds (covers lambda=0 under the adaptive rule too)
+                gamma = jnp.where(
+                    jnp.asarray(snap.num_active_edges()) == 0, 0, gamma)
+                st.params = self._consensus_dyn(
+                    st.params, jnp.asarray(snap.V), gamma)
+                gamma_used = np.asarray(gamma)
+                self.ledger.record_consensus(
+                    gamma_used, snap.num_active_edges(),
+                    tail_mult_per_cluster=faults.consensus_tail_mult(
+                        snap.delay_mult, snap.device_up, snap.adj))
+
+            if algo.is_aggregation_step(t):
+                full = algo.full_participation or algo.mode != "tthf"
+                if full:
+                    weights = faults.full_participation_weights(
+                        snap.device_up, np.asarray(self.net.varrho))
+                    n_up = int(snap.device_up.sum())
+                    mults = snap.delay_mult[snap.device_up]
+                else:
+                    # availability-aware cluster sampling: the jax key
+                    # seeds a host-side draw among available devices
+                    rng = np.random.default_rng(
+                        int(jax.random.randint(k_agg, (), 0, 2**31 - 1)))
+                    picks, counts = faults.availability_sample(
+                        rng, snap.device_up, k=k)
+                    weights = faults.aggregation_weights(
+                        picks, counts, snap.varrho, s)
+                    n_up = int(counts.sum())
+                    mults = faults.uplink_tail_mults(
+                        snap.delay_mult, picks, counts)
+                if n_up > 0:
+                    g, st.params = self._aggregate_dyn(
+                        st.params, jnp.asarray(weights, jnp.float32),
+                        up_flat)
+                    st.global_params = g
+                    self.ledger.record_aggregation(
+                        n_up, uplink_delay_mults=mults)
+                # an all-dark fleet skips the aggregation entirely: no
+                # uplinks, no broadcast, the global model stays put
+
+            if t % eval_every == 0 or t == st.t + steps:
+                loss, acc = self._eval(st.global_params)
+                hist.ts.append(t)
+                hist.global_loss.append(float(loss))
+                hist.global_acc.append(float(acc))
+                if record_dispersion:
+                    hist.dispersion.append(float(self._dispersion(st.params)))
+                    hist.consensus_err.append(
+                        float(self._consensus_error(st.params)))
+                hist.gamma_used.append(gamma_used.copy())
+                hist.uplinks.append(self.ledger.uplinks)
+                hist.d2d_msgs.append(self.ledger.d2d_msgs)
+                hist.active_devices.append(int(snap.device_up.sum()))
 
         st.t += steps
         return st, hist

@@ -48,7 +48,10 @@ def _kernel(x_ref, dt_ref, loga_ref, b_ref, c_ref, y_ref, hfin_ref, h_scr):
     t_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
     u_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
     causal = t_idx >= u_idx
-    decay = jnp.exp(l[:, None] - l[None, :])
+    # clamp to <= 0: exact on causal entries (l is non-increasing) and
+    # keeps the masked half from overflowing exp (inf * 0 = nan in the
+    # backward pass)
+    decay = jnp.exp(jnp.minimum(l[:, None] - l[None, :], 0.0))
     m = jnp.where(causal, g * decay * dt[None, :], 0.0)
     y = jnp.dot(m, x, preferred_element_type=jnp.float32)     # (Q, P)
 

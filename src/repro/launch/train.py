@@ -37,6 +37,10 @@ def run_sim(args):
                           graph="geometric", seed=args.seed)
     model = make_sim_model(args.model, data.feature_dim, data.num_classes,
                            hidden=args.hidden)
+    dynamics = None
+    if args.scenario:
+        from repro.netsim import scenarios
+        dynamics = scenarios.get(args.scenario, seed=args.seed)
     if args.baseline:
         algo = make_baseline_config(args.baseline, args.tau)
         algo = dataclasses.replace(algo, constant_lr=args.lr)
@@ -44,7 +48,8 @@ def run_sim(args):
         algo = TTHFConfig(tau=args.tau, consensus_every=args.consensus_every,
                           gamma_d2d=args.gamma, constant_lr=args.lr,
                           phi=args.phi)
-    tr = TTHFTrainer(model, data, topo, algo, batch_size=args.batch)
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=args.batch,
+                     dynamics=dynamics)
     t0 = time.time()
     st, hist = tr.run(steps=args.steps, seed=args.seed,
                       eval_every=args.eval_every)
@@ -85,9 +90,20 @@ def run_scale(args):
                             consensus_every=ce,
                             gamma_d2d=args.gamma, lr=args.lr,
                             consensus_mode=args.consensus_mode)
+    refreshable = bool(args.scenario) and args.sync == "tthf"
     step, net = make_tthf_train_step(model, scale, dtype=jnp.float32,
-                                     sync=args.sync)
+                                     sync=args.sync,
+                                     refreshable=refreshable)
     step = jax.jit(step)
+    tvnet = plan = None
+    if refreshable:
+        from repro.core.mixing import build_mixing_plan, refresh_matrices
+        from repro.netsim import scenarios
+        from repro.netsim.dynamics import TimeVaryingNetwork
+        tvnet = TimeVaryingNetwork(net, scenarios.get(args.scenario,
+                                                      seed=args.seed))
+        plan = build_mixing_plan(net, scale.gamma_d2d,
+                                 backend=scale.consensus_mode)
 
     params = model.init(jax.random.PRNGKey(args.seed))
     params = stack_replicas(params, scale.replicas)
@@ -105,10 +121,25 @@ def run_scale(args):
             for kk in ("tokens", "labels")
         }
         key, kp = jax.random.split(key)
-        picks = jax.random.randint(kp, (net.num_clusters,), 0,
-                                   net.cluster_size)
         t0 = time.time()
-        params, loss = step(params, batch, picks, jnp.asarray(outer))
+        if tvnet is not None:
+            # same semantics as ScaleTrainer._dynamic_interval: picks
+            # only among available replicas, dark clusters weightless
+            from repro.netsim import faults
+            snap = tvnet.snapshot(outer + 1)
+            rng = np.random.default_rng(
+                int(jax.random.randint(kp, (), 0, 2**31 - 1)))
+            picks_np, counts = faults.availability_sample(
+                rng, snap.device_up, k=1)
+            picks = jnp.asarray(np.where(counts > 0, picks_np[:, 0], 0),
+                                jnp.int32)
+            params, loss = step(params, batch, picks, jnp.asarray(outer),
+                                refresh_matrices(plan, snap.V),
+                                jnp.asarray(snap.varrho, jnp.float32))
+        else:
+            picks = jax.random.randint(kp, (net.num_clusters,), 0,
+                                       net.cluster_size)
+            params, loss = step(params, batch, picks, jnp.asarray(outer))
         print(f"interval {outer}: loss={float(loss):.4f} "
               f"({time.time()-t0:.1f}s, tau={scale.tau} local steps, "
               f"sync={args.sync})")
@@ -125,6 +156,9 @@ def main(argv=None):
     ap.add_argument("--consensus-every", type=int, default=5)
     ap.add_argument("--lr", type=float, default=2e-3)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--scenario", default=None,
+                    help="netsim dynamics scenario (see repro.netsim."
+                         "scenarios; e.g. markov_links, device_churn)")
     # sim
     ap.add_argument("--model", choices=["svm", "nn"], default="svm")
     ap.add_argument("--devices", type=int, default=125)

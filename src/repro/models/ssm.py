@@ -120,7 +120,12 @@ def ssd_chunked(x, dt, loga, B, C, h0=None, chunk: int = 256):
         ti = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
         ui = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
         causal = (ti >= ui)[None, :, :, None]
-        decay = jnp.exp(l[:, :, None, :] - l[:, None, :, :])  # (b,Q,Q,H)
+        # l is non-increasing, so causal (t >= u) exponents are <= 0;
+        # clamping is exact there and keeps the non-causal entries
+        # (discarded by the where) from overflowing exp in f32 — an inf
+        # behind a where still poisons the BACKWARD pass (0 * inf = nan)
+        decay = jnp.exp(jnp.minimum(
+            l[:, :, None, :] - l[:, None, :, :], 0.0))        # (b,Q,Q,H)
         m = jnp.where(causal, g[..., None] * decay * dtc[:, None, :, :], 0.0)
         y = jnp.einsum("btuh,buhp->bthp", m, xc)
         # inter-chunk (carried state)

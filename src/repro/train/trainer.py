@@ -19,10 +19,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import restore_train_state, save_train_state
-from repro.configs.base import ModelConfig
+from repro.configs.base import DynamicsConfig, ModelConfig
 from repro.core.distributed import (
     TTHFScaleConfig, make_tthf_train_step, stack_replicas)
 from repro.core.energy import CommLedger
+from repro.core.mixing import build_mixing_plan, refresh_matrices
 from repro.data.tokens import synthetic_token_batches
 from repro.models import ModelApi, build_model
 from repro.train.metrics import MetricLogger
@@ -44,14 +45,30 @@ class TrainerConfig:
 
 class ScaleTrainer:
     def __init__(self, cfg: ModelConfig, scale: TTHFScaleConfig,
-                 tcfg: TrainerConfig, sync: str = "tthf"):
+                 tcfg: TrainerConfig, sync: str = "tthf",
+                 dynamics: Optional[DynamicsConfig] = None):
         self.cfg = cfg
         self.scale = scale
         self.tcfg = tcfg
         self.model: ModelApi = build_model(cfg)
         dtype = jnp.float32 if tcfg.dtype == "float32" else jnp.bfloat16
+        # netsim dynamics: the event stream ticks once per aggregation
+        # interval; each interval's consensus matrices are refreshed on
+        # the active subgraph and fed to the (once-traced) step
+        self.tvnet = None
+        self._plan = None
+        dynamic = dynamics is not None and not dynamics.is_static
+        # only a tthf step carries consensus matrices to refresh
+        refreshable = dynamic and sync == "tthf"
         step, self.net = make_tthf_train_step(
-            self.model, scale, dtype=dtype, sync=sync)
+            self.model, scale, dtype=dtype, sync=sync,
+            refreshable=refreshable)
+        if dynamic:
+            from repro.netsim.dynamics import TimeVaryingNetwork
+            self.tvnet = TimeVaryingNetwork(self.net, dynamics)
+        if refreshable:
+            self._plan = build_mixing_plan(
+                self.net, scale.gamma_d2d, backend=scale.consensus_mode)
         self._step = jax.jit(step)
         self._eval_loss = jax.jit(
             lambda p, b: self.model.loss(p, b, dtype=dtype, remat=False))
@@ -95,6 +112,46 @@ class ScaleTrainer:
                 g, {k: jnp.asarray(v) for k, v in b.items()})))
         return float(np.mean(losses))
 
+    def _dynamic_interval(self, batch, kp, events: int):
+        """One interval under netsim dynamics: per-aggregation-round W
+        refresh on the active subgraph, availability-aware picks, and
+        straggler-aware ledger records."""
+        from repro.netsim import faults
+
+        snap = self.tvnet.snapshot(self.interval + 1)
+        refresh = (refresh_matrices(self._plan, snap.V)
+                   if self._plan is not None else None)
+        rng = np.random.default_rng(
+            int(jax.random.randint(kp, (), 0, 2**31 - 1)))
+        picks_np, counts = faults.availability_sample(
+            rng, snap.device_up, k=self.scale.sample_per_cluster)
+        # the jitted aggregation takes one representative per cluster;
+        # a dark cluster's substitute pick carries weight 0 through the
+        # event's renormalized varrho, matching the sim path
+        picks = jnp.asarray(np.where(counts > 0, picks_np[:, 0], 0),
+                            jnp.int32)
+        args = (self.params, batch, picks, jnp.asarray(self.interval))
+        if refresh is not None:
+            self.params, loss = self._step(
+                *args, refresh, jnp.asarray(snap.varrho, jnp.float32))
+        else:
+            self.params, loss = self._step(*args)
+        self.ledger.record_aggregation(
+            int(counts.sum()),
+            uplink_delay_mults=faults.uplink_tail_mults(
+                snap.delay_mult, picks_np, counts))
+        # no active edges -> nothing is exchanged: bill 0 rounds there
+        gammas = np.where(snap.num_active_edges() > 0,
+                          self.scale.gamma_d2d, 0)
+        self.ledger.record_consensus(
+            list(gammas) * events,
+            list(snap.num_active_edges()) * events,
+            tail_mult_per_cluster=list(faults.consensus_tail_mult(
+                snap.delay_mult, snap.device_up, snap.adj)) * events)
+        self.ledger.record_local_step(
+            int(snap.device_up.sum()) * self.scale.tau)
+        return loss
+
     def save(self, path: Optional[str] = None):
         p = path or str(Path(self.tcfg.ckpt_dir)
                         / f"interval_{self.interval:06d}.npz")
@@ -116,17 +173,21 @@ class ScaleTrainer:
         for _ in range(n):
             batch = self._interval_batch()
             self.key, kp = jax.random.split(self.key)
-            picks = jax.random.randint(
-                kp, (self.net.num_clusters,), 0, self.scale.cluster_size)
-            self.params, loss = self._step(
-                self.params, batch, picks, jnp.asarray(self.interval))
+            if self.tvnet is None:
+                picks = jax.random.randint(
+                    kp, (self.net.num_clusters,), 0,
+                    self.scale.cluster_size)
+                self.params, loss = self._step(
+                    self.params, batch, picks, jnp.asarray(self.interval))
+                self.ledger.record_aggregation(self.net.num_clusters)
+                self.ledger.record_consensus(
+                    [self.scale.gamma_d2d] * self.net.num_clusters * events,
+                    list(self.net.num_d2d_edges()) * events)
+                self.ledger.record_local_step(
+                    self.scale.replicas * self.scale.tau)
+            else:
+                loss = self._dynamic_interval(batch, kp, events)
             self.interval += 1
-            self.ledger.record_aggregation(self.net.num_clusters)
-            self.ledger.record_consensus(
-                [self.scale.gamma_d2d] * self.net.num_clusters * events,
-                list(self.net.num_d2d_edges()) * events)
-            self.ledger.record_local_step(
-                self.scale.replicas * self.scale.tau)
             logs = {"train_loss": float(loss),
                     "uplinks": self.ledger.uplinks,
                     "d2d_msgs": self.ledger.d2d_msgs}

@@ -1,0 +1,321 @@
+"""repro.netsim: event streams, time-varying consensus, availability-
+aware sampling, straggler pricing, and the masked-mixing contract
+(DESIGN.md §8)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DynamicsConfig, TopologyConfig, TTHFConfig
+from repro.core import mixing
+from repro.core.energy import DELTA_GLOB_S, E_GLOB_J, CommLedger
+from repro.core.sampling import sample_devices, sample_devices_multi, \
+    sampled_global_model_multi
+from repro.core.schedule import adaptive_gamma
+from repro.core.topology import build_network, geometric_adjacency, \
+    metropolis_weights
+from repro.netsim import (
+    EventStream, TimeVaryingNetwork, aggregation_weights,
+    availability_sample, check_masked_assumption2, consensus_tail_mult,
+    full_participation_weights, renormalized_varrho, scenarios,
+    weighted_global_pytree,
+)
+
+PARITY_TOL = 1e-5
+
+
+def small_net(seed=0, devices=20, clusters=4):
+    return build_network(TopologyConfig(
+        num_devices=devices, num_clusters=clusters, graph="geometric",
+        seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# event streams
+# ---------------------------------------------------------------------------
+
+def test_event_stream_deterministic_and_random_access():
+    net = small_net()
+    cfg = scenarios.get("device_churn", seed=7)
+    a, b = EventStream(cfg, net.adj), EventStream(cfg, net.adj)
+    # interleaved / out-of-order queries must agree with fresh streams
+    for t in (5, 2, 17, 17, 9):
+        ea, eb = a.at(t), b.at(t)
+        np.testing.assert_array_equal(ea.device_up, eb.device_up)
+        np.testing.assert_array_equal(ea.link_up, eb.link_up)
+        np.testing.assert_array_equal(ea.delay_mult, eb.delay_mult)
+
+
+def test_static_stream_is_all_up_forever():
+    net = small_net()
+    st = EventStream(scenarios.get("static"), net.adj)
+    for t in (0, 1, 13, 50):
+        ev = st.at(t)
+        assert ev.all_up and (ev.delay_mult == 1.0).all()
+
+
+def test_flash_crowd_window():
+    net = small_net()
+    cfg = scenarios.get("flash_crowd", seed=1)
+    st = EventStream(cfg, net.adj)
+    n = net.num_devices
+    assert st.at(cfg.flash_at - 1).device_up.sum() == n
+    dark = n - st.at(cfg.flash_at).device_up.sum()
+    assert dark == round(cfg.flash_drop_frac * n)
+    assert st.at(cfg.flash_at + cfg.flash_duration).device_up.sum() == n
+
+
+def test_scenario_registry():
+    assert set(scenarios.names()) >= {
+        "static", "markov_links", "device_churn", "stragglers",
+        "flash_crowd"}
+    assert scenarios.get("static").is_static
+    assert not scenarios.get("device_churn").is_static
+    assert scenarios.get("stragglers", seed=9).seed == 9
+    with pytest.raises(KeyError):
+        scenarios.get("nope")
+
+
+# ---------------------------------------------------------------------------
+# time-varying network: Assumption 2 per event
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["static", "markov_links", "device_churn",
+                                  "stragglers", "flash_crowd"])
+def test_every_event_satisfies_masked_assumption2(name):
+    net = small_net(seed=2)
+    tv = TimeVaryingNetwork(net, scenarios.get(name, seed=3))
+    for t in range(1, 41):
+        snap = tv.snapshot(t)
+        for c in range(net.num_clusters):
+            check_masked_assumption2(snap.V[c], snap.adj[c],
+                                     snap.device_up[c])
+        # component-wise contraction is always < 1 (graceful degradation
+        # even when the active subgraph disconnects)
+        assert (snap.lambdas < 1.0).all()
+        assert abs(snap.varrho.sum() - 1.0) < 1e-6
+
+
+def test_static_snapshot_matches_base_network():
+    net = small_net(seed=4)
+    tv = TimeVaryingNetwork(net, scenarios.get("static"))
+    snap = tv.snapshot(10)
+    np.testing.assert_allclose(snap.V, net.V, atol=1e-6)
+    np.testing.assert_array_equal(snap.adj, net.adj)
+    np.testing.assert_allclose(snap.varrho, net.varrho, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# masked mixing: cross-backend parity + hold-your-parameters contract
+# ---------------------------------------------------------------------------
+
+def test_masked_mixing_backend_parity_and_dropped_device_invariance():
+    rng = np.random.default_rng(0)
+    N, s, M = 4, 5, 33
+    V = jnp.asarray(np.stack(
+        [metropolis_weights(geometric_adjacency(s, 0.8, rng))
+         for _ in range(N)]), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
+    mask_np = rng.random((N, s)) > 0.35
+    mask_np[0] = True                      # one fully-active cluster
+    mask_np[1] = [True, False, False, False, False]   # near-dark cluster
+    mask = jnp.asarray(mask_np)
+    gamma = jnp.asarray([3, 2, 1, 4], jnp.int32)
+
+    outs = {b: np.asarray(mixing.mix(z, V, gamma, backend=b,
+                                     device_mask=mask))
+            for b in ("reference", "masked_loop", "fused_power", "pallas")}
+    for b in ("masked_loop", "fused_power", "pallas"):
+        np.testing.assert_allclose(outs[b], outs["reference"],
+                                   atol=PARITY_TOL, err_msg=b)
+
+    ref, zn = outs["reference"], np.asarray(z)
+    Vn = np.asarray(V)
+    for c in range(N):
+        dropped = np.flatnonzero(~mask_np[c])
+        active = np.flatnonzero(mask_np[c])
+        # dropped devices hold their parameters exactly
+        np.testing.assert_allclose(ref[c, dropped], zn[c, dropped],
+                                   atol=1e-7)
+        # active devices mix ONLY among themselves: reproduce from the
+        # masked matrix restricted to the active block
+        vm = np.asarray(mixing.masked_consensus_matrix(V, mask))[c]
+        sub = vm[np.ix_(active, active)]
+        expect = np.linalg.matrix_power(sub, int(gamma[c])) @ zn[c, active]
+        np.testing.assert_allclose(ref[c, active], expect, atol=PARITY_TOL)
+
+
+def test_masked_matrix_rejects_precomputed_w():
+    net = small_net()
+    V = jnp.asarray(net.V)
+    z = jnp.zeros((net.num_clusters, net.cluster_size, 3))
+    mask = jnp.ones((net.num_clusters, net.cluster_size), bool)
+    W = mixing.matrix_powers(V, jnp.full((net.num_clusters,), 2))
+    with pytest.raises(ValueError):
+        mixing.mix(z, V, 2, backend="fused_power", W=W, device_mask=mask)
+
+
+# ---------------------------------------------------------------------------
+# availability-aware sampling
+# ---------------------------------------------------------------------------
+
+def test_renormalized_varrho_darkens_clusters():
+    base = np.array([0.25, 0.25, 0.25, 0.25])
+    up = np.ones((4, 5), bool)
+    np.testing.assert_allclose(renormalized_varrho(up, base), base)
+    up[2] = False
+    v = renormalized_varrho(up, base)
+    assert v[2] == 0.0 and abs(v.sum() - 1.0) < 1e-12
+    np.testing.assert_allclose(v[[0, 1, 3]], 1 / 3)
+
+
+def test_availability_sample_respects_mask_and_count():
+    rng = np.random.default_rng(0)
+    up = np.ones((3, 6), bool)
+    up[0, :4] = False                      # 2 available
+    up[1] = False                          # dark
+    picks, counts = availability_sample(rng, up, k=3)
+    assert counts.tolist() == [2, 0, 3]
+    assert set(picks[0, :2]) <= {4, 5}
+    assert (picks[1] == -1).all()
+    assert len(set(picks[2, :3])) == 3     # without replacement
+
+
+def test_availability_sampling_unbiased_over_seeds():
+    """Mean over seeds of the sampled aggregate ~= varrho'-weighted mean
+    of the AVAILABLE devices' values (the Theorem-1 unbiasedness
+    property, availability-aware)."""
+    rng = np.random.default_rng(1)
+    N, s, M = 3, 5, 7
+    z = rng.normal(size=(N, s, M))
+    up = rng.random((N, s)) > 0.4
+    up[:, 0] = True                        # no dark cluster
+    base = np.full((N,), 1 / N)
+    varrho = renormalized_varrho(up, base)
+    zj = jnp.asarray(z)
+
+    acc = np.zeros(M)
+    trials = 600
+    for t in range(trials):
+        picks, counts = availability_sample(
+            np.random.default_rng(t), up, k=1)
+        w = aggregation_weights(picks, counts, varrho, s)
+        acc += np.asarray(weighted_global_pytree(
+            {"z": zj.reshape(N * s, M)}, jnp.asarray(w), N)["z"])
+    mean = acc / trials
+    expect = sum(varrho[c] * z[c][up[c]].mean(axis=0) for c in range(N))
+    np.testing.assert_allclose(mean, expect, atol=0.05)
+
+
+def test_full_participation_weights_cover_available_only():
+    up = np.ones((2, 4), bool)
+    up[0, 1:] = False
+    w = full_participation_weights(up, np.array([0.5, 0.5]))
+    assert abs(w.sum() - 1.0) < 1e-12
+    assert w[0, 0] == 0.5 and (w[0, 1:] == 0).all()
+    np.testing.assert_allclose(w[1], 0.125)
+
+
+# ---------------------------------------------------------------------------
+# multi-device sampling (satellite: the ledger must stop lying)
+# ---------------------------------------------------------------------------
+
+def test_multi_sampling_without_replacement_and_k1_compat():
+    key = jax.random.PRNGKey(3)
+    picks = sample_devices_multi(key, 6, 5, 3)
+    assert picks.shape == (6, 3)
+    for row in np.asarray(picks):
+        assert len(set(row.tolist())) == 3
+        assert all(0 <= i < 5 for i in row)
+    # k=1 reproduces the historical single-device stream bit-for-bit
+    np.testing.assert_array_equal(
+        np.asarray(sample_devices_multi(key, 6, 5, 1))[:, 0],
+        np.asarray(sample_devices(key, 6, 5)))
+    with pytest.raises(ValueError):
+        sample_devices_multi(key, 6, 5, 9)
+
+
+def test_multi_sampling_k_equals_s_is_full_mean():
+    rng = np.random.default_rng(5)
+    N, s, M = 4, 5, 11
+    z = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
+    varrho = jnp.full((N,), 1 / N, jnp.float32)
+    picks = sample_devices_multi(jax.random.PRNGKey(0), N, s, s)
+    out = np.asarray(sampled_global_model_multi(z, picks, varrho))
+    expect = np.asarray(jnp.einsum("c,cm->m", varrho, z.mean(axis=1)))
+    np.testing.assert_allclose(out, expect, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CommLedger pricing (incl. straggler tails)
+# ---------------------------------------------------------------------------
+
+def test_ledger_energy_delay_pricing_exact():
+    led = CommLedger()
+    led.record_aggregation(4)                       # 4 uplinks
+    led.record_consensus([2, 3], [5, 1])            # 5 rounds, 26 msgs
+    assert led.uplinks == 4 and led.d2d_rounds == 5
+    assert led.d2d_msgs == 2 * 2 * 5 + 3 * 2 * 1
+    e_ratio, d_ratio = 0.1, 0.25
+    assert led.energy(e_ratio) == pytest.approx(
+        4 * E_GLOB_J + led.d2d_msgs * e_ratio * E_GLOB_J)
+    assert led.delay(d_ratio) == pytest.approx(
+        4 * DELTA_GLOB_S + 5 * d_ratio * DELTA_GLOB_S)
+
+
+def test_ledger_straggler_tails_stretch_delay_not_energy():
+    base, slow = CommLedger(), CommLedger()
+    for led, mults in ((base, None), (slow, [3.0, 1.0])):
+        led.record_aggregation(2, uplink_delay_mults=mults)
+        led.record_consensus([4], [6],
+                             tail_mult_per_cluster=None if mults is None
+                             else [2.5])
+    assert base.energy(0.1) == pytest.approx(slow.energy(0.1))
+    # uplinks: one device 3x slower -> +2 uplink-equivalents;
+    # rounds: 4 rounds at 2.5x -> +6 round-equivalents
+    assert slow.straggler_uplink_extra == pytest.approx(2.0)
+    assert slow.straggler_round_extra == pytest.approx(6.0)
+    d_ratio = 0.5
+    assert slow.delay(d_ratio) - base.delay(d_ratio) == pytest.approx(
+        2.0 * DELTA_GLOB_S + 6.0 * d_ratio * DELTA_GLOB_S)
+
+
+def test_consensus_tail_is_slowest_exchanging_device():
+    up = np.array([[True, True, False], [True, False, False]])
+    adj = np.zeros((2, 3, 3), bool)
+    adj[0, 0, 1] = adj[0, 1, 0] = True
+    mult = np.array([[2.0, 5.0, 99.0], [7.0, 1.0, 1.0]])
+    tails = consensus_tail_mult(mult, up, adj)
+    # cluster 0: devices 0,1 exchange -> tail 5; dropped 99x ignored
+    # cluster 1: nobody has an active edge -> baseline 1
+    np.testing.assert_allclose(tails, [5.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# adaptive gamma under churn
+# ---------------------------------------------------------------------------
+
+def test_adaptive_gamma_zero_for_isolated_clusters():
+    ups = jnp.asarray([1.0, 1.0, 1.0])
+    lam = jnp.asarray([0.7, 0.7, 0.7])
+    active = jnp.asarray([5, 1, 0])
+    g = adaptive_gamma(jnp.float32(0.01), 1.0, ups, lam, active, 100)
+    g = np.asarray(g)
+    assert g[0] > 0 and g[1] == 0 and g[2] == 0
+
+
+# ---------------------------------------------------------------------------
+# geometric fallback surfacing (satellite)
+# ---------------------------------------------------------------------------
+
+def test_geometric_fallback_warns_and_counts():
+    counter = []
+    with pytest.warns(RuntimeWarning, match="falling back to a ring"):
+        adj = geometric_adjacency(12, 0.01, np.random.default_rng(0),
+                                  fallback_counter=counter)
+    assert len(counter) == 1
+    assert adj.sum() == 2 * 12              # it IS the ring
+    net = small_net()
+    assert net.geometric_fallbacks == 0     # healthy tuning reports none
