@@ -1,0 +1,110 @@
+"""Fog-hierarchy depth sweep: convergence + level-tagged comms per L.
+
+Runs the Sec.-IV simulation at every hierarchy depth L in {2, 3, 4}
+over the same model/data/topology/schedule (flat L = 2 is today's
+TT-HF and doubles as the regression anchor), and records the full
+trajectories — loss/accuracy at each eval point plus the priced
+communication energy, straggler-aware delay, and the per-level uplink
+split — to ``BENCH_hierarchy.json``. A second sweep repeats L = 3
+under device churn to show dark-subtree renormalization costing fewer
+uplinks rather than correctness.
+
+Row ``derived`` format (CSV-safe, '|' separated trajectories):
+  final_loss=..;final_acc=..;energy_J=..;delay_s=..;
+  uplinks=..;uplinks_L<l>=..;ts=..|..;loss=..|..
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row, append_trajectory
+
+LR = 0.002
+E_RATIO = 0.1   # E_D2D / E_Glob (the 5G-ish operating point [17])
+D_RATIO = 0.1
+
+PRESETS = {2: "flat", 3: "fog3", 4: "fog4"}
+
+
+def _traj(vals, fmt="{:.4f}") -> str:
+    return "|".join(fmt.format(v) for v in vals)
+
+
+def _world(scale: str, seed: int):
+    """A hierarchy-friendly fleet: the cluster count must factor into
+    every swept depth (8 = 2*2*2 serves L in {2, 3, 4})."""
+    from repro.configs import TopologyConfig
+    from repro.data import fashion_synth, partition_noniid_labels
+    from repro.models import make_sim_model
+
+    if scale == "paper":
+        devices, clusters, points, steps = 120, 24, 60_000, 600
+    else:
+        devices, clusters, points, steps = 24, 8, 4_800, 100
+    x, y = fashion_synth(num_points=points, seed=seed)
+    data = partition_noniid_labels(x, y, num_devices=devices,
+                                   labels_per_device=3, seed=seed)
+    topo = TopologyConfig(num_devices=devices, num_clusters=clusters,
+                          graph="geometric",
+                          target_spectral_radius=0.7, seed=seed)
+    svm = make_sim_model("svm", data.feature_dim, data.num_classes)
+    return data, topo, svm, steps
+
+
+def _one(name, data, topo, model, algo, steps, seed, hierarchy, dynamics):
+    from repro.core import TTHFTrainer
+
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=16,
+                     dynamics=dynamics, hierarchy=hierarchy)
+    t0 = time.perf_counter()
+    _, hist = tr.run(steps=steps, eval_every=5, seed=seed)
+    us = (time.perf_counter() - t0) * 1e6
+    led = tr.ledger
+    by_level = "".join(f";uplinks_L{l}={n}" for l, n in
+                       sorted(led.uplinks_by_level.items()))
+    return Row(
+        f"hierarchy/{name}", us,
+        f"final_loss={hist.global_loss[-1]:.4f};"
+        f"final_acc={hist.global_acc[-1]:.4f};"
+        f"energy_J={led.energy(E_RATIO):.3f};"
+        f"delay_s={led.delay(D_RATIO):.2f};"
+        f"uplinks={led.uplinks}{by_level};"
+        f"d2d_msgs={led.d2d_msgs};"
+        f"ts={_traj(hist.ts, '{:d}')};"
+        f"loss={_traj(hist.global_loss)};"
+        f"acc={_traj(hist.global_acc)}")
+
+
+def run(scale: str = "ci", seed: int = 0) -> list[Row]:
+    from repro.configs import TTHFConfig
+    from repro.hierarchy import presets
+    from repro.netsim import scenarios
+
+    data, topo, model, steps = _world(scale, seed)
+    algo = TTHFConfig(tau=20, consensus_every=5, gamma_d2d=2,
+                      constant_lr=LR)
+
+    rows = []
+    for levels, preset in PRESETS.items():
+        hier = presets.get(preset, tau=algo.tau)
+        rows.append(_one(f"L{levels}", data, topo, model, algo, steps,
+                         seed, hier, None))
+    # depth under weather: dark subtrees renormalize, uplinks shrink
+    rows.append(_one("L3_churn", data, topo, model, algo, steps, seed,
+                     presets.get("fog3", tau=algo.tau),
+                     scenarios.get("device_churn", seed=seed)))
+
+    # claim rows: the root tier gets rarer with depth, so total uplink
+    # traffic must not grow; churn must not inflate it either
+    def _uplinks(row):
+        return int(dict(kv.split("=") for kv in
+                        row.derived.split(";") if "=" in kv)["uplinks"])
+    by = {r.name.split("/")[1]: r for r in rows}
+    rows.append(Row(
+        "hierarchy/claims", 0.0,
+        f"flat_uplinks={_uplinks(by['L2'])};"
+        f"depth_saves_root_traffic="
+        f"{_uplinks(by['L3']) <= 2 * _uplinks(by['L2'])};"
+        f"churn_cheaper={_uplinks(by['L3_churn']) <= _uplinks(by['L3'])}"))
+    append_trajectory("hierarchy", rows, scale)
+    return rows

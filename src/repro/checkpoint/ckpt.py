@@ -17,6 +17,14 @@ def _flatten_with_paths(tree):
     return flat, treedef
 
 
+def _npz_path(path: str) -> str:
+    """The path np.savez actually writes: it silently appends ``.npz``
+    when the suffix is missing. Save and restore both normalize through
+    here, so an extensionless path round-trips instead of raising
+    FileNotFoundError on restore."""
+    return path if str(path).endswith(".npz") else str(path) + ".npz"
+
+
 def save_pytree(path: str, tree) -> None:
     flat, treedef = _flatten_with_paths(tree)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(flat)}
@@ -24,7 +32,7 @@ def save_pytree(path: str, tree) -> None:
     idx_tree = jax.tree.unflatten(treedef, list(range(len(flat))))
     arrays["__index__"] = np.frombuffer(
         json.dumps(_to_jsonable(idx_tree)).encode(), dtype=np.uint8)
-    np.savez(path, **arrays)
+    np.savez(_npz_path(path), **arrays)
 
 
 def _to_jsonable(t):
@@ -46,7 +54,7 @@ def _from_jsonable(t, leaves):
 
 
 def restore_pytree(path: str, shardings=None):
-    data = np.load(path, allow_pickle=False)
+    data = np.load(_npz_path(path), allow_pickle=False)
     idx = json.loads(bytes(data["__index__"].tobytes()).decode())
     leaves = {}
     for k in data.files:

@@ -5,6 +5,7 @@ from repro.configs.base import (
     ARCH_KINDS,
     INPUT_SHAPES,
     DynamicsConfig,
+    HierarchyConfig,
     InputShape,
     ModelConfig,
     TopologyConfig,
@@ -54,7 +55,7 @@ def get_shape(name: str) -> InputShape:
 
 
 __all__ = [
-    "ARCHS", "ARCH_KINDS", "INPUT_SHAPES", "DynamicsConfig", "InputShape",
-    "ModelConfig", "TopologyConfig", "TrainConfig", "TTHFConfig",
-    "get_arch", "get_shape",
+    "ARCHS", "ARCH_KINDS", "INPUT_SHAPES", "DynamicsConfig",
+    "HierarchyConfig", "InputShape", "ModelConfig", "TopologyConfig",
+    "TrainConfig", "TTHFConfig", "get_arch", "get_shape",
 ]

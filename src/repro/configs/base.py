@@ -260,6 +260,63 @@ class DynamicsConfig:
 
 
 @dataclass(frozen=True)
+class HierarchyConfig:
+    """L-level aggregation tree (``repro.hierarchy``, DESIGN.md §9).
+
+    TT-HF's two timescales are the L = 2 special case of a multi-stage
+    D2D-enabled fog hierarchy (Hosseinalipour et al. 2020): level 0 is
+    the per-cluster D2D consensus tier (unchanged — ``core/mixing.py``),
+    levels 1..L-1 are parent-node aggregations over child subtrees, and
+    level L-1 is the root (the global model). Each aggregation tier
+    l = 1..L-1 has its own period ``taus[l-1]`` and sampling fan-in
+    ``sample[l-1]``:
+
+    * tier 1 aggregates clusters — ``sample[0]`` is the paper's
+      ``sample_per_cluster`` (devices drawn per cluster, eq. 7);
+    * tier l >= 2 aggregates level-(l-1) nodes — ``sample[l-1]``
+      children are drawn per parent (0 = full participation);
+    * periods nest: ``taus[l-1]`` divides ``taus[l]``, so a deeper
+      aggregation always composes with the shallower ones below it.
+
+    ``branching[l-1]`` gives the children per level-l parent for the
+    intermediate tiers l = 1..L-2 (the root absorbs every remaining
+    node); an empty tuple asks :func:`repro.hierarchy.tree.build_tree`
+    to balance the fan-ins automatically. The L = 2 config
+    (``is_flat``) is today's TT-HF and the trainers route it through
+    the historical code path — bit-for-bit identical trajectories.
+    """
+    levels: int = 2
+    branching: Tuple[int, ...] = ()
+    taus: Tuple[int, ...] = (20,)
+    sample: Tuple[int, ...] = (1,)
+    weights: str = "mass"           # child weights: subtree device mass
+
+    def __post_init__(self):
+        assert self.levels >= 2, "a hierarchy needs at least root+clusters"
+        tiers = self.levels - 1
+        assert len(self.taus) == tiers, \
+            f"need one tau per aggregation tier: {tiers}, got {self.taus}"
+        assert len(self.sample) == tiers, \
+            f"need one fan-in per aggregation tier: {tiers}, " \
+            f"got {self.sample}"
+        assert len(self.branching) in (0, max(self.levels - 2, 0)), \
+            "branching must be empty (auto) or cover every " \
+            "intermediate tier (the root absorbs the rest)"
+        assert all(t >= 1 for t in self.taus)
+        assert all(k >= 0 for k in self.sample)
+        assert self.sample[0] >= 1, "tier 1 must sample >= 1 device"
+        for lo, hi in zip(self.taus, self.taus[1:]):
+            assert hi % lo == 0, \
+                f"tier periods must nest (each divides the next): {self.taus}"
+        assert self.weights in ("mass",), f"unknown weights {self.weights!r}"
+
+    @property
+    def is_flat(self) -> bool:
+        """True iff this is plain two-timescale TT-HF (no fog tiers)."""
+        return self.levels == 2
+
+
+@dataclass(frozen=True)
 class TTHFConfig:
     """Algorithm 1 knobs + schedules (Sec. II-C, III)."""
     tau: int = 20                   # local model training interval length

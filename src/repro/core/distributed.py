@@ -97,15 +97,13 @@ def consensus_event(params, net: Network, gamma, mode: str = "fused"):
     return plan.apply_pytree(params)
 
 
-def sampled_aggregation(params, net: Network, picks: jax.Array,
-                        varrho: Optional[jax.Array] = None):
+def sampled_aggregation(params, net: Network, picks: jax.Array):
     """eq. (7): w_hat = sum_c varrho_c w_{n_c}; broadcast to all replicas.
 
-    ``varrho`` overrides the static cluster weights (netsim: the
-    event's availability-renormalized weights — a dark cluster's
-    substitute pick carries weight 0)."""
-    if varrho is None:
-        varrho = jnp.asarray(net.varrho, jnp.float32)
+    The static-topology path. Under netsim dynamics the aggregation is
+    :func:`weighted_aggregation` instead — availability-renormalized
+    per-device weights rather than one pick per cluster."""
+    varrho = jnp.asarray(net.varrho, jnp.float32)
     N, s = net.num_clusters, net.cluster_size
 
     def one(leaf):
@@ -118,6 +116,28 @@ def sampled_aggregation(params, net: Network, picks: jax.Array,
                                 ).reshape(leaf.shape)
 
     return jax.tree.map(one, params)
+
+
+def weighted_aggregation(params, net: Network, weights: jax.Array):
+    """Availability-aware eq. (7) over the replica axis.
+
+    ``weights``: the (N, s) per-device aggregation weight matrix from
+    :func:`repro.netsim.faults.aggregation_weights` — EVERY sampled
+    replica enters the aggregate with its renormalized weight (the
+    ledger's uplink count and the aggregate agree under
+    ``sample_per_cluster > 1``), and a dark cluster's devices carry 0.
+    The global model is broadcast to every replica (replicas are
+    physical shards — scale-mode churn shapes the sync pattern, not the
+    broadcast); an all-dark event (weights sum to 0) is the identity.
+    """
+    from repro.netsim.faults import weighted_global_pytree
+    g = weighted_global_pytree(params, weights, net.num_clusters)
+    alive = weights.sum() > 0
+
+    def one(gl, pl):
+        return jnp.where(alive, jnp.broadcast_to(gl[None], pl.shape), pl)
+
+    return jax.tree.map(one, g, params)
 
 
 def full_aggregation(params, net: Network):
@@ -141,28 +161,53 @@ def full_aggregation(params, net: Network):
 
 def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
                          dtype=jnp.bfloat16, remat: bool = True,
-                         sync: str = "tthf", refreshable: bool = False):
-    """Returns step(params_R, batch, picks, step_idx) -> (params_R, loss).
+                         sync: str = "tthf", refreshable: bool = False,
+                         hierarchy=None):
+    """Returns step(params_R, batch, agg, step_idx, ...) -> (params_R, loss).
 
     params_R: every leaf has leading replica axis R.
     batch: {"tokens": (tau, R, b, T), "labels": ...} — one aggregation
     interval's worth of microbatches.
-    picks: (N,) int32 sampled representative per cluster.
     sync: "tthf" (Algorithm 1) | "star" (FedAvg: full participation,
     no D2D) | "local" (no sync at all — diagnostics).
 
-    ``refreshable=True`` (netsim dynamics): the step takes two extra
-    arguments — ``mix_refresh``, the per-aggregation-round consensus
-    matrices from :func:`repro.core.mixing.refresh_matrices` (the
-    stacked powers ``W = V^Gamma`` for the ``fused`` backend, the
-    masked ``V`` otherwise), and ``varrho_t``, the event's (N,)
-    availability-renormalized cluster weights (a dark cluster's
-    substitute pick aggregates with weight 0). The step is traced
-    once; each interval feeds the current event's matrices/weights, so
-    churned replicas hold their parameters through every consensus
-    event of that interval and never contribute to ``w_hat``.
+    The aggregation argument ``agg`` depends on the mode — one fixed
+    form per build, so each step traces exactly once:
+
+    * default — ``picks``: (N,) int32 sampled representative per
+      cluster (the historical signature, bit-for-bit preserved);
+    * ``refreshable=True`` (netsim dynamics) — ``agg_w``: the (N, s)
+      per-device aggregation weight matrix from
+      :func:`repro.netsim.faults.aggregation_weights`. All k sampled
+      replicas per cluster enter the aggregate (the multi-sampling
+      the ledger bills), dark clusters carry weight 0, and an all-dark
+      event is the identity. The step also takes ``mix_refresh``, the
+      per-aggregation-round consensus matrices from
+      :func:`repro.core.mixing.refresh_matrices` (stacked powers
+      ``W = V^Gamma`` for the ``fused`` backend, the masked ``V``
+      otherwise) — churned replicas hold their parameters through
+      every consensus event of the interval;
+    * ``hierarchy`` (a non-flat :class:`~repro.configs.base.
+      HierarchyConfig`) — ``agg_m``: the composed (R, R) device matrix
+      of a :class:`~repro.hierarchy.aggregate.HierarchyEvent`. Its
+      fixed shape encodes ANY aggregation depth (hold-rows included),
+      so one compilation serves every interval of an L-level run; the
+      per-level weight matrices change per call, never the HLO. A flat
+      (L = 2) hierarchy config is exactly TT-HF and takes the
+      historical ``picks`` path. Composes with ``refreshable``
+      (``mix_refresh`` stays the last argument).
     """
     net = scale.network()
+    if hierarchy is not None and hierarchy.is_flat:
+        hierarchy = None            # plain TT-HF: the historical path
+    if hierarchy is not None:
+        assert sync == "tthf", "hierarchical aggregation implies tthf sync"
+        assert hierarchy.taus[0] == scale.tau, \
+            f"tier-1 period {hierarchy.taus[0]} must equal the " \
+            f"interval length tau={scale.tau}"
+        assert hierarchy.sample[0] == scale.sample_per_cluster, \
+            f"tier-1 fan-in {hierarchy.sample[0]} must equal " \
+            f"sample_per_cluster={scale.sample_per_cluster}"
     assert scale.tau % scale.consensus_every == 0
     n_blocks = scale.tau // scale.consensus_every
     # one build-time plan: for fused_power this precomputes W = V^Gamma
@@ -194,7 +239,11 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
             params, grads)
         return params, jnp.mean(losses)
 
-    def interval(params, batch, picks, mix_refresh, varrho_t=None):
+    # one aggregation form per build — the jitted step traces exactly once
+    agg_kind = ("matrix" if hierarchy is not None
+                else "weights" if refreshable else "picks")
+
+    def interval(params, batch, agg, mix_refresh):
         lr = jnp.asarray(scale.lr, jnp.float32)
         # (tau, R, b, T) -> (blocks, consensus_every, R, b, T)
         def resh(x):
@@ -212,18 +261,24 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
 
         params, block_losses = jax.lax.scan(block, params, batch_b)
         if sync == "tthf":
-            params = sampled_aggregation(params, net, picks,
-                                         varrho=varrho_t)
+            if agg_kind == "picks":
+                params = sampled_aggregation(params, net, agg)
+            elif agg_kind == "weights":
+                params = weighted_aggregation(params, net, agg)
+            else:
+                from repro.hierarchy.aggregate import \
+                    apply_device_matrix_pytree
+                params = apply_device_matrix_pytree(params, agg)
         elif sync == "star":
             params = full_aggregation(params, net)
         return params, jnp.mean(block_losses)
 
     if refreshable:
-        def step(params, batch, picks, step_idx, mix_refresh, varrho_t):
-            return interval(params, batch, picks, mix_refresh, varrho_t)
+        def step(params, batch, agg, step_idx, mix_refresh):
+            return interval(params, batch, agg, mix_refresh)
     else:
-        def step(params, batch, picks, step_idx):
-            return interval(params, batch, picks, None)
+        def step(params, batch, agg, step_idx):
+            return interval(params, batch, agg, None)
 
     return step, net
 

@@ -41,16 +41,43 @@ class CommLedger:
     local_steps: int = 0
     straggler_uplink_extra: float = 0.0   # uplink-equivalents of tail delay
     straggler_round_extra: float = 0.0    # D2D-round-equivalents
+    # level-tagged uplink accounting (repro.hierarchy): tier 1 counts
+    # device -> fog uploads, tier l >= 2 counts fog -> fog relays.
+    # ``uplinks`` stays the total over all tiers, so flat runs are
+    # unchanged and energy/delay keep pricing every transmitted model.
+    uplinks_by_level: dict = field(default_factory=dict)
 
-    def record_aggregation(self, devices_sampled: int,
-                           uplink_delay_mults=None) -> None:
-        """``uplink_delay_mults``: per-sampled-device tail multipliers
-        (>= 1); each uplink pays its own device's multiplier."""
-        self.uplinks += devices_sampled
-        self.broadcasts += 1
+    def record_uplinks(self, n: int, level: int = 1,
+                       uplink_delay_mults=None) -> None:
+        """Count ``n`` model uploads entering a tier-``level``
+        aggregate (no broadcast implied — fog tiers relay upward)."""
+        self.uplinks += n
+        self.uplinks_by_level[level] = \
+            self.uplinks_by_level.get(level, 0) + n
         if uplink_delay_mults is not None:
             for m in uplink_delay_mults:
                 self.straggler_uplink_extra += max(float(m) - 1.0, 0.0)
+
+    def record_aggregation(self, devices_sampled: int,
+                           uplink_delay_mults=None,
+                           level: int = 1) -> None:
+        """``uplink_delay_mults``: per-sampled-device tail multipliers
+        (>= 1); each uplink pays its own device's multiplier."""
+        self.record_uplinks(devices_sampled, level, uplink_delay_mults)
+        self.broadcasts += 1
+
+    def record_hierarchy_event(self, uplinks_by_level: dict,
+                               uplink_delay_mults=None) -> None:
+        """One multi-level aggregation event: tier-1 device uploads
+        (one broadcast, straggler multipliers apply) plus the fog ->
+        fog relays of every deeper tier. Shared by both trainers so
+        sim and scale mode cannot diverge on hierarchy pricing."""
+        for level in sorted(uplinks_by_level):
+            if level == 1:
+                self.record_aggregation(uplinks_by_level[1],
+                                        uplink_delay_mults, level=1)
+            else:
+                self.record_uplinks(uplinks_by_level[level], level=level)
 
     def record_consensus(self, rounds_per_cluster, edges_per_cluster,
                          tail_mult_per_cluster=None) -> None:

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import DynamicsConfig, TTHFConfig, TopologyConfig
+from repro.configs.base import (
+    DynamicsConfig, HierarchyConfig, TTHFConfig, TopologyConfig)
 from repro.core import consensus as cns
 from repro.core import mixing
 from repro.core import sampling as smp
@@ -65,7 +66,8 @@ class TTHFTrainer:
                  batch_size: int = 16, eval_x: np.ndarray | None = None,
                  eval_y: np.ndarray | None = None,
                  use_kernel: bool = False, backend: str | None = None,
-                 dynamics: Optional[DynamicsConfig] = None):
+                 dynamics: Optional[DynamicsConfig] = None,
+                 hierarchy: Optional[HierarchyConfig] = None):
         assert data.num_devices == topo_cfg.num_devices
         assert 1 <= algo.sample_per_cluster <= topo_cfg.cluster_size, \
             "sample_per_cluster must be within the cluster size"
@@ -83,6 +85,23 @@ class TTHFTrainer:
             from repro.netsim.dynamics import TimeVaryingNetwork
             self.tvnet = TimeVaryingNetwork(self.net, dynamics,
                                             weights=topo_cfg.weights)
+        # multi-stage fog hierarchy (repro.hierarchy): a flat (L = 2)
+        # config IS two-timescale TT-HF — it adds nothing, so it is
+        # ignored entirely (the TT-HF knobs come from ``algo``) and the
+        # historical code path below runs bit-for-bit
+        self.hierarchy = None
+        self.tree = None
+        if hierarchy is not None and not hierarchy.is_flat:
+            assert algo.mode == "tthf" and not algo.full_participation, \
+                "hierarchical aggregation implies sampled tthf mode"
+            assert hierarchy.taus[0] == algo.tau, \
+                f"tier-1 period {hierarchy.taus[0]} must equal tau={algo.tau}"
+            assert hierarchy.sample[0] == algo.sample_per_cluster, \
+                "tier-1 fan-in must equal sample_per_cluster"
+            from repro.hierarchy import build_tree
+            self.hierarchy = hierarchy
+            self.tree = build_tree(hierarchy, self.net.num_clusters,
+                                   self.net.cluster_size)
         # consensus backend (core/mixing.py): gamma is traced inside the
         # jitted consensus (Remark-1 adaptive rounds), so the default is
         # the masked bounded loop; use_kernel routes through Pallas.
@@ -112,6 +131,10 @@ class TTHFTrainer:
         self._consensus_dyn = jax.jit(self._consensus_dyn_impl)
         self._aggregate_dyn = jax.jit(self._aggregate_dyn_impl)
         self._upsilon_dyn = jax.jit(self._upsilon_dyn_impl)
+        # hierarchical variants: the event's composed (I, I) device
+        # matrix and the root's (I,) source weights are call arguments
+        self._apply_event = jax.jit(self._apply_event_impl)
+        self._global_from_weights = jax.jit(self._global_from_weights_impl)
 
     # ------------------------------------------------------------------
     def init(self, seed: int = 0) -> TTHFState:
@@ -221,6 +244,14 @@ class TTHFTrainer:
 
         return g, jax.tree.map(receive, bcast, params)
 
+    def _apply_event_impl(self, params, device_matrix):
+        from repro.hierarchy.aggregate import apply_device_matrix_pytree
+        return apply_device_matrix_pytree(params, device_matrix)
+
+    def _global_from_weights_impl(self, params, gw):
+        from repro.hierarchy.aggregate import global_from_weights
+        return global_from_weights(params, gw)
+
     def _upsilon_dyn_impl(self, params, device_up):
         """Definition-2 divergence over ACTIVE devices, max over leaves."""
         ups = []
@@ -228,6 +259,53 @@ class TTHFTrainer:
             z = leaf.reshape(self.net.num_clusters, self.net.cluster_size, -1)
             ups.append(cns.masked_divergence_upsilon(z, device_up))
         return jnp.max(jnp.stack(ups), axis=0)
+
+    # ------------------------------------------------------------------
+    # consensus events — shared by the static, dynamic and hierarchical
+    # loops (one home for the gamma schedule + ledger billing)
+    # ------------------------------------------------------------------
+    def _consensus_event_static(self, st, eta_t) -> np.ndarray:
+        """One consensus event on the base topology; mutates st.params,
+        bills the ledger, returns the per-cluster rounds used."""
+        algo = self.algo
+        if algo.gamma_d2d >= 0:
+            gamma = fixed_gamma(self.net.num_clusters, algo.gamma_d2d)
+        else:
+            ups = self._upsilon(st.params)
+            gamma = adaptive_gamma(eta_t, algo.phi, ups, self.lambdas,
+                                   self.net.cluster_size, self.model_dim)
+        st.params = self._consensus(st.params, gamma)
+        gamma_used = np.asarray(gamma)
+        self.ledger.record_consensus(gamma_used, self._edges)
+        return gamma_used
+
+    def _consensus_event_dynamic(self, st, snap, eta_t, up) -> np.ndarray:
+        """One consensus event on the snapshot's active subgraph.
+        Clusters with no live edge have nothing to exchange: mixing
+        there is the identity, so neither run nor bill rounds (covers
+        lambda=0 under the adaptive rule too)."""
+        from repro.netsim import faults
+
+        algo = self.algo
+        if algo.gamma_d2d >= 0:
+            gamma = fixed_gamma(self.net.num_clusters, algo.gamma_d2d)
+        else:
+            ups = self._upsilon_dyn(st.params, up)
+            gamma = adaptive_gamma(
+                eta_t, algo.phi, ups,
+                jnp.asarray(snap.lambdas, jnp.float32),
+                jnp.asarray(snap.active_per_cluster, jnp.int32),
+                self.model_dim)
+        gamma = jnp.where(
+            jnp.asarray(snap.num_active_edges()) == 0, 0, gamma)
+        st.params = self._consensus_dyn(
+            st.params, jnp.asarray(snap.V), gamma)
+        gamma_used = np.asarray(gamma)
+        self.ledger.record_consensus(
+            gamma_used, snap.num_active_edges(),
+            tail_mult_per_cluster=faults.consensus_tail_mult(
+                snap.delay_mult, snap.device_up, snap.adj))
+        return gamma_used
 
     def _dispersion(self, params):
         """A^(t) sample: sum_c varrho_c ||wbar_c - wbar||^2."""
@@ -253,7 +331,12 @@ class TTHFTrainer:
             record_dispersion: bool = True) -> tuple[TTHFState, History]:
         """Drive Algorithm 1. With a non-static ``dynamics`` config the
         netsim path runs instead; a static/absent config takes the
-        historical code path (bit-for-bit identical trajectories)."""
+        historical code path (bit-for-bit identical trajectories).
+        A non-flat ``hierarchy`` config routes to the multi-stage fog
+        loop (a flat one is plain TT-HF and stays on this path)."""
+        if self.tree is not None:
+            return self._run_hierarchical(steps, seed, eval_every, state,
+                                          record_dispersion)
         if self.tvnet is not None:
             return self._run_dynamic(steps, seed, eval_every, state,
                                      record_dispersion)
@@ -269,17 +352,7 @@ class TTHFTrainer:
 
             gamma_used = np.zeros((self.net.num_clusters,), np.int32)
             if algo.is_consensus_step(t):
-                if algo.gamma_d2d >= 0:
-                    gamma = fixed_gamma(self.net.num_clusters, algo.gamma_d2d)
-                else:
-                    ups = self._upsilon(st.params)
-                    gamma = adaptive_gamma(eta_t, algo.phi, ups,
-                                           self.lambdas,
-                                           self.net.cluster_size,
-                                           self.model_dim)
-                st.params = self._consensus(st.params, gamma)
-                gamma_used = np.asarray(gamma)
-                self.ledger.record_consensus(gamma_used, self._edges)
+                gamma_used = self._consensus_event_static(st, eta_t)
 
             if algo.is_aggregation_step(t):
                 full = algo.full_participation or algo.mode != "tthf"
@@ -348,27 +421,8 @@ class TTHFTrainer:
 
             gamma_used = np.zeros((N,), np.int32)
             if algo.is_consensus_step(t):
-                if algo.gamma_d2d >= 0:
-                    gamma = fixed_gamma(N, algo.gamma_d2d)
-                else:
-                    ups = self._upsilon_dyn(st.params, up)
-                    gamma = adaptive_gamma(
-                        eta_t, algo.phi, ups,
-                        jnp.asarray(snap.lambdas, jnp.float32),
-                        jnp.asarray(snap.active_per_cluster, jnp.int32),
-                        self.model_dim)
-                # clusters with no live edge have nothing to exchange:
-                # mixing there is the identity, so neither run nor bill
-                # rounds (covers lambda=0 under the adaptive rule too)
-                gamma = jnp.where(
-                    jnp.asarray(snap.num_active_edges()) == 0, 0, gamma)
-                st.params = self._consensus_dyn(
-                    st.params, jnp.asarray(snap.V), gamma)
-                gamma_used = np.asarray(gamma)
-                self.ledger.record_consensus(
-                    gamma_used, snap.num_active_edges(),
-                    tail_mult_per_cluster=faults.consensus_tail_mult(
-                        snap.delay_mult, snap.device_up, snap.adj))
+                gamma_used = self._consensus_event_dynamic(st, snap,
+                                                           eta_t, up)
 
             if algo.is_aggregation_step(t):
                 full = algo.full_participation or algo.mode != "tthf"
@@ -412,6 +466,98 @@ class TTHFTrainer:
                 hist.uplinks.append(self.ledger.uplinks)
                 hist.d2d_msgs.append(self.ledger.d2d_msgs)
                 hist.active_devices.append(int(snap.device_up.sum()))
+
+        st.t += steps
+        return st, hist
+
+    # ------------------------------------------------------------------
+    def _run_hierarchical(self, steps: int, seed: int = 0,
+                          eval_every: int = 5,
+                          state: TTHFState | None = None,
+                          record_dispersion: bool = True
+                          ) -> tuple[TTHFState, History]:
+        """Algorithm 1 generalized to the multi-stage fog hierarchy
+        (DESIGN.md §9).
+
+        Local SGD and D2D consensus run exactly as in the static (or,
+        with a non-static ``dynamics``, the netsim) loop. At every
+        tier-1 step (``hierarchy.taus[0] == algo.tau``) the host
+        resolves a :class:`~repro.hierarchy.aggregate.HierarchyEvent`:
+        the event calendar picks the depth (nested periods — a root
+        event composes every tier below it), sampling draws only among
+        available devices/subtrees with dark subtrees renormalized
+        away, and the composed (I, I) device matrix is applied in one
+        jitted einsum — devices below a depth-d ancestor receive that
+        subtree's aggregate, offline devices hold their parameters.
+        ``global_params`` (the served model) updates only when the
+        root fires; the ledger tags every tier's uplinks by level.
+        """
+        from repro.hierarchy import build_event
+        from repro.netsim import faults
+
+        st = state or self.init(seed)
+        hist = History()
+        algo = self.algo
+        N, s = self.net.num_clusters, self.net.cluster_size
+
+        for t in range(st.t + 1, st.t + steps + 1):
+            eta_t = self.eta(t - 1)
+            st.key, k_step, k_agg = jax.random.split(st.key, 3)
+            snap = (self.tvnet.snapshot(t)
+                    if self.tvnet is not None else None)
+            if snap is None:
+                st.params = self._local_step(st.params, k_step, eta_t)
+                self.ledger.record_local_step(self.data.num_devices)
+            else:
+                up = jnp.asarray(snap.device_up)
+                st.params = self._local_step_dyn(st.params, k_step, eta_t,
+                                                 up.reshape(-1))
+                self.ledger.record_local_step(int(snap.device_up.sum()))
+
+            gamma_used = np.zeros((N,), np.int32)
+            if algo.is_consensus_step(t):
+                if snap is None:
+                    gamma_used = self._consensus_event_static(st, eta_t)
+                else:
+                    gamma_used = self._consensus_event_dynamic(
+                        st, snap, eta_t, up)
+
+            if algo.is_aggregation_step(t):
+                rng = np.random.default_rng(
+                    int(jax.random.randint(k_agg, (), 0, 2**31 - 1)))
+                device_up = (snap.device_up if snap is not None
+                             else np.ones((N, s), bool))
+                ev = build_event(rng, self.tree, self.hierarchy, t,
+                                 device_up, receive_offline=False)
+                if ev is not None and ev.total_uplinks > 0:
+                    if ev.global_weights is not None:
+                        st.global_params = self._global_from_weights(
+                            st.params, jnp.asarray(ev.global_weights))
+                    st.params = self._apply_event(
+                        st.params, jnp.asarray(ev.device_matrix))
+                    self.ledger.record_hierarchy_event(
+                        ev.uplinks_by_level,
+                        uplink_delay_mults=(faults.uplink_tail_mults(
+                            snap.delay_mult, ev.picks, ev.counts)
+                            if snap is not None else None))
+                # an all-dark fleet skips the event: no uplinks, no
+                # broadcast, every model (and the global one) stays put
+
+            if t % eval_every == 0 or t == st.t + steps:
+                loss, acc = self._eval(st.global_params)
+                hist.ts.append(t)
+                hist.global_loss.append(float(loss))
+                hist.global_acc.append(float(acc))
+                if record_dispersion:
+                    hist.dispersion.append(float(self._dispersion(st.params)))
+                    hist.consensus_err.append(
+                        float(self._consensus_error(st.params)))
+                hist.gamma_used.append(gamma_used.copy())
+                hist.uplinks.append(self.ledger.uplinks)
+                hist.d2d_msgs.append(self.ledger.d2d_msgs)
+                hist.active_devices.append(
+                    int(snap.device_up.sum()) if snap is not None
+                    else self.data.num_devices)
 
         st.t += steps
         return st, hist

@@ -1,0 +1,24 @@
+"""repro.hierarchy — multi-stage fog aggregation trees (DESIGN.md §9).
+
+Generalizes TT-HF's two timescales to a configurable L-level
+aggregation hierarchy: level 0 is per-cluster D2D consensus (the
+unchanged ``core/mixing.py`` engine), levels 1..L-1 are parent-node
+aggregations over child subtrees — each tier with its own period and
+sampling fan-in — and the root is the global model. Tree construction
+(:mod:`tree`), per-level weight-matrix aggregation (:mod:`aggregate`),
+and a named-preset registry (:mod:`presets`).
+"""
+from repro.hierarchy.aggregate import (
+    HierarchyEvent, apply_device_matrix_pytree, build_event,
+    child_matrix, global_from_weights, interval_depth, live_levels,
+    rep_matrix, sample_children,
+)
+from repro.hierarchy.tree import AggregationTree, build_tree
+from repro.hierarchy import presets
+
+__all__ = [
+    "AggregationTree", "HierarchyEvent", "apply_device_matrix_pytree",
+    "build_event", "build_tree", "child_matrix", "global_from_weights",
+    "interval_depth", "live_levels", "presets", "rep_matrix",
+    "sample_children",
+]

@@ -41,6 +41,10 @@ def run_sim(args):
     if args.scenario:
         from repro.netsim import scenarios
         dynamics = scenarios.get(args.scenario, seed=args.seed)
+    hierarchy = None
+    if args.hierarchy:
+        from repro.hierarchy import presets
+        hierarchy = presets.get(args.hierarchy, tau=args.tau)
     if args.baseline:
         algo = make_baseline_config(args.baseline, args.tau)
         algo = dataclasses.replace(algo, constant_lr=args.lr)
@@ -49,15 +53,18 @@ def run_sim(args):
                           gamma_d2d=args.gamma, constant_lr=args.lr,
                           phi=args.phi)
     tr = TTHFTrainer(model, data, topo, algo, batch_size=args.batch,
-                     dynamics=dynamics)
+                     dynamics=dynamics, hierarchy=hierarchy)
     t0 = time.time()
     st, hist = tr.run(steps=args.steps, seed=args.seed,
                       eval_every=args.eval_every)
     dt = time.time() - t0
+    by_level = "".join(f" L{l}={n}" for l, n in
+                       sorted(tr.ledger.uplinks_by_level.items()))
     print(f"steps={args.steps} wall={dt:.1f}s "
           f"final_loss={hist.global_loss[-1]:.4f} "
           f"final_acc={hist.global_acc[-1]:.4f} "
-          f"uplinks={tr.ledger.uplinks} d2d_msgs={tr.ledger.d2d_msgs}")
+          f"uplinks={tr.ledger.uplinks}{by_level} "
+          f"d2d_msgs={tr.ledger.d2d_msgs}")
     if args.out:
         json.dump({k: np.asarray(v).tolist()
                    for k, v in hist.as_arrays().items()},
@@ -90,6 +97,26 @@ def run_scale(args):
                             consensus_every=ce,
                             gamma_d2d=args.gamma, lr=args.lr,
                             consensus_mode=args.consensus_mode)
+    if args.hierarchy:
+        # the fog hierarchy lives in the ScaleTrainer interval loop
+        from repro.hierarchy import presets
+        from repro.netsim import scenarios
+        from repro.train import ScaleTrainer, TrainerConfig
+        tr = ScaleTrainer(
+            cfg, scale,
+            TrainerConfig(batch_per_replica=args.batch, seq_len=args.seq,
+                          intervals=args.steps, eval_every=0,
+                          seed=args.seed),
+            sync=args.sync,
+            dynamics=(scenarios.get(args.scenario, seed=args.seed)
+                      if args.scenario else None),
+            hierarchy=presets.get(args.hierarchy, tau=args.tau))
+        tr.init().run()
+        by_level = "".join(f" L{l}={n}" for l, n in
+                           sorted(tr.ledger.uplinks_by_level.items()))
+        print(f"intervals={tr.interval} uplinks={tr.ledger.uplinks}"
+              f"{by_level} d2d_msgs={tr.ledger.d2d_msgs}")
+        return 0
     refreshable = bool(args.scenario) and args.sync == "tthf"
     step, net = make_tthf_train_step(model, scale, dtype=jnp.float32,
                                      sync=args.sync,
@@ -123,19 +150,21 @@ def run_scale(args):
         key, kp = jax.random.split(key)
         t0 = time.time()
         if tvnet is not None:
-            # same semantics as ScaleTrainer._dynamic_interval: picks
-            # only among available replicas, dark clusters weightless
+            # same semantics as ScaleTrainer._dynamic_interval: the
+            # full (N, s) availability-aware weight matrix — every
+            # sampled replica enters the aggregate, dark clusters
+            # carry weight 0
             from repro.netsim import faults
             snap = tvnet.snapshot(outer + 1)
             rng = np.random.default_rng(
                 int(jax.random.randint(kp, (), 0, 2**31 - 1)))
             picks_np, counts = faults.availability_sample(
-                rng, snap.device_up, k=1)
-            picks = jnp.asarray(np.where(counts > 0, picks_np[:, 0], 0),
-                                jnp.int32)
-            params, loss = step(params, batch, picks, jnp.asarray(outer),
-                                refresh_matrices(plan, snap.V),
-                                jnp.asarray(snap.varrho, jnp.float32))
+                rng, snap.device_up, k=scale.sample_per_cluster)
+            agg_w = jnp.asarray(faults.aggregation_weights(
+                picks_np, counts, snap.varrho, scale.cluster_size),
+                jnp.float32)
+            params, loss = step(params, batch, agg_w, jnp.asarray(outer),
+                                refresh_matrices(plan, snap.V))
         else:
             picks = jax.random.randint(kp, (net.num_clusters,), 0,
                                        net.cluster_size)
@@ -159,6 +188,9 @@ def main(argv=None):
     ap.add_argument("--scenario", default=None,
                     help="netsim dynamics scenario (see repro.netsim."
                          "scenarios; e.g. markov_links, device_churn)")
+    ap.add_argument("--hierarchy", default=None,
+                    help="fog-hierarchy preset (see repro.hierarchy."
+                         "presets; e.g. fog3, fog4, fog3_sampled)")
     # sim
     ap.add_argument("--model", choices=["svm", "nn"], default="svm")
     ap.add_argument("--devices", type=int, default=125)

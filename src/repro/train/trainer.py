@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import restore_train_state, save_train_state
-from repro.configs.base import DynamicsConfig, ModelConfig
+from repro.configs.base import DynamicsConfig, HierarchyConfig, ModelConfig
 from repro.core.distributed import (
     TTHFScaleConfig, make_tthf_train_step, stack_replicas)
 from repro.core.energy import CommLedger
@@ -27,6 +27,10 @@ from repro.core.mixing import build_mixing_plan, refresh_matrices
 from repro.data.tokens import synthetic_token_batches
 from repro.models import ModelApi, build_model
 from repro.train.metrics import MetricLogger
+
+# the only dtypes the microstep math supports; anything else (a typo'd
+# "float16") used to silently coerce to bfloat16
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
 
 
 @dataclass
@@ -42,16 +46,33 @@ class TrainerConfig:
     dtype: str = "float32"
     seed: int = 0
 
+    def __post_init__(self):
+        if self.dtype not in _DTYPES:
+            raise ValueError(
+                f"unknown dtype {self.dtype!r}; expected one of "
+                f"{sorted(_DTYPES)}")
+
 
 class ScaleTrainer:
     def __init__(self, cfg: ModelConfig, scale: TTHFScaleConfig,
                  tcfg: TrainerConfig, sync: str = "tthf",
-                 dynamics: Optional[DynamicsConfig] = None):
+                 dynamics: Optional[DynamicsConfig] = None,
+                 hierarchy: Optional[HierarchyConfig] = None):
         self.cfg = cfg
         self.scale = scale
         self.tcfg = tcfg
         self.model: ModelApi = build_model(cfg)
-        dtype = jnp.float32 if tcfg.dtype == "float32" else jnp.bfloat16
+        dtype = _DTYPES[tcfg.dtype]
+        # multi-stage fog hierarchy: a flat (L = 2) config IS TT-HF and
+        # takes the historical code path bit-for-bit
+        self.hierarchy = None
+        self.tree = None
+        if hierarchy is not None and not hierarchy.is_flat:
+            from repro.hierarchy import build_tree
+            assert sync == "tthf", "hierarchy implies tthf sync"
+            self.hierarchy = hierarchy
+            self.tree = build_tree(hierarchy, scale.num_clusters,
+                                   scale.cluster_size)
         # netsim dynamics: the event stream ticks once per aggregation
         # interval; each interval's consensus matrices are refreshed on
         # the active subgraph and fed to the (once-traced) step
@@ -62,7 +83,7 @@ class ScaleTrainer:
         refreshable = dynamic and sync == "tthf"
         step, self.net = make_tthf_train_step(
             self.model, scale, dtype=dtype, sync=sync,
-            refreshable=refreshable)
+            refreshable=refreshable, hierarchy=hierarchy)
         if dynamic:
             from repro.netsim.dynamics import TimeVaryingNetwork
             self.tvnet = TimeVaryingNetwork(self.net, dynamics)
@@ -75,32 +96,52 @@ class ScaleTrainer:
         self.ledger = CommLedger()
         self.metrics = MetricLogger(tcfg.log_path)
         self.key = jax.random.PRNGKey(tcfg.seed)
+        self._make_gens()
+        # resume fidelity: batches drawn so far from every train
+        # generator (identical across replicas) and from the eval
+        # stream — persisted so restore-and-continue replays neither
+        self._train_draws = 0
+        self._eval_draws = 0
+        self.params = None
+        # hierarchical runs: the SERVED global model — materialized
+        # only when the root tier fires (between root events replicas
+        # under different fog nodes legitimately disagree)
+        self._global = None
+        self.interval = 0
+
+    def _make_gens(self):
+        tcfg, cfg = self.tcfg, self.cfg
         self._gens = [synthetic_token_batches(
             tcfg.batch_per_replica, tcfg.seq_len, cfg.vocab_size,
-            seed=tcfg.seed, shard_id=r) for r in range(scale.replicas)]
+            seed=tcfg.seed, shard_id=r)
+            for r in range(self.scale.replicas)]
         self._eval_gen = synthetic_token_batches(
             tcfg.batch_per_replica, tcfg.seq_len, cfg.vocab_size,
             seed=tcfg.seed + 10_000, shard_id=99)
-        self.params = None
-        self.interval = 0
 
     # ------------------------------------------------------------------
     def init(self):
-        self.params = stack_replicas(
-            self.model.init(jax.random.PRNGKey(self.tcfg.seed)),
-            self.scale.replicas)
+        init_params = self.model.init(jax.random.PRNGKey(self.tcfg.seed))
+        self.params = stack_replicas(init_params, self.scale.replicas)
+        self._global = init_params
         return self
 
     def _interval_batch(self):
         tau, R = self.scale.tau, self.scale.replicas
         mbs = [[next(g) for _ in range(tau)] for g in self._gens]
+        self._train_draws += tau
         return {k: jnp.asarray(np.stack(
             [[mbs[r][t][k] for r in range(R)] for t in range(tau)]))
             for k in ("tokens", "labels")}
 
     def _global_params(self):
-        """Replica 0's copy — identical to all others right after the
-        interval's aggregation (asserted in tests)."""
+        """The served global model. Flat runs: replica 0's copy —
+        identical to all others right after the interval's aggregation
+        (asserted in tests). Hierarchical runs: the root-tier snapshot
+        (the initial broadcast until the root first fires — replicas
+        under different fog nodes disagree between root events)."""
+        if self.tree is not None:
+            return self._global
         return jax.tree.map(lambda l: l[0], self.params)
 
     def evaluate(self) -> float:
@@ -108,14 +149,15 @@ class ScaleTrainer:
         losses = []
         for _ in range(self.tcfg.eval_batches):
             b = next(self._eval_gen)
+            self._eval_draws += 1
             losses.append(float(self._eval_loss(
                 g, {k: jnp.asarray(v) for k, v in b.items()})))
         return float(np.mean(losses))
 
     def _dynamic_interval(self, batch, kp, events: int):
         """One interval under netsim dynamics: per-aggregation-round W
-        refresh on the active subgraph, availability-aware picks, and
-        straggler-aware ledger records."""
+        refresh on the active subgraph, availability-aware sampling as
+        one (N, s) weight matrix, and straggler-aware ledger records."""
         from repro.netsim import faults
 
         snap = self.tvnet.snapshot(self.interval + 1)
@@ -125,22 +167,84 @@ class ScaleTrainer:
             int(jax.random.randint(kp, (), 0, 2**31 - 1)))
         picks_np, counts = faults.availability_sample(
             rng, snap.device_up, k=self.scale.sample_per_cluster)
-        # the jitted aggregation takes one representative per cluster;
-        # a dark cluster's substitute pick carries weight 0 through the
-        # event's renormalized varrho, matching the sim path
-        picks = jnp.asarray(np.where(counts > 0, picks_np[:, 0], 0),
-                            jnp.int32)
-        args = (self.params, batch, picks, jnp.asarray(self.interval))
         if refresh is not None:
+            # the refreshable step aggregates with the full (N, s)
+            # weight matrix, so EVERY sampled replica the ledger bills
+            # actually enters the aggregate (sample_per_cluster > 1)
+            # and a dark cluster's devices carry exact weight 0
+            agg_w = jnp.asarray(faults.aggregation_weights(
+                picks_np, counts, snap.varrho, self.scale.cluster_size),
+                jnp.float32)
             self.params, loss = self._step(
-                *args, refresh, jnp.asarray(snap.varrho, jnp.float32))
+                self.params, batch, agg_w, jnp.asarray(self.interval),
+                refresh)
         else:
-            self.params, loss = self._step(*args)
+            # star/local sync: the picks argument is unused inside
+            picks = jnp.asarray(np.where(counts > 0, picks_np[:, 0], 0),
+                                jnp.int32)
+            self.params, loss = self._step(
+                self.params, batch, picks, jnp.asarray(self.interval))
         self.ledger.record_aggregation(
             int(counts.sum()),
             uplink_delay_mults=faults.uplink_tail_mults(
                 snap.delay_mult, picks_np, counts))
-        # no active edges -> nothing is exchanged: bill 0 rounds there
+        self._record_interval_comms(snap, events)
+        return loss
+
+    def _hierarchical_interval(self, batch, kp, events: int):
+        """One interval of the multi-stage fog hierarchy: the host
+        resolves the event's per-level weight matrices and feeds their
+        composed (R, R) device matrix to the once-compiled step."""
+        from repro.hierarchy import build_event
+        from repro.netsim import faults
+
+        snap = None
+        refresh = None
+        if self.tvnet is not None:
+            snap = self.tvnet.snapshot(self.interval + 1)
+            refresh = (refresh_matrices(self._plan, snap.V)
+                       if self._plan is not None else None)
+            device_up = snap.device_up
+        else:
+            device_up = np.ones((self.scale.num_clusters,
+                                 self.scale.cluster_size), bool)
+        rng = np.random.default_rng(
+            int(jax.random.randint(kp, (), 0, 2**31 - 1)))
+        # tier-1 period == tau, so every interval fires depth >= 1
+        ev = build_event(rng, self.tree, self.hierarchy,
+                         (self.interval + 1) * self.scale.tau, device_up,
+                         receive_offline=True)
+        agg_m = jnp.asarray(ev.device_matrix)
+        args = (self.params, batch, agg_m, jnp.asarray(self.interval))
+        if refresh is not None:
+            self.params, loss = self._step(*args, refresh)
+        else:
+            self.params, loss = self._step(*args)
+        if ev.global_weights is not None and ev.total_uplinks:
+            # a live root event just broadcast the root model to every
+            # replica — snapshot it as the served global model
+            self._global = jax.tree.map(lambda l: l[0], self.params)
+        if ev.total_uplinks:
+            self.ledger.record_hierarchy_event(
+                ev.uplinks_by_level,
+                uplink_delay_mults=(faults.uplink_tail_mults(
+                    snap.delay_mult, ev.picks, ev.counts)
+                    if snap is not None else None))
+        if snap is not None:
+            self._record_interval_comms(snap, events)
+        else:
+            self.ledger.record_consensus(
+                [self.scale.gamma_d2d] * self.net.num_clusters * events,
+                list(self.net.num_d2d_edges()) * events)
+            self.ledger.record_local_step(
+                self.scale.replicas * self.scale.tau)
+        return loss
+
+    def _record_interval_comms(self, snap, events: int):
+        """Consensus + local-step ledger records for one dynamic
+        interval (no active edges -> nothing is exchanged there)."""
+        from repro.netsim import faults
+
         gammas = np.where(snap.num_active_edges() > 0,
                           self.scale.gamma_d2d, 0)
         self.ledger.record_consensus(
@@ -150,17 +254,57 @@ class ScaleTrainer:
                 snap.delay_mult, snap.device_up, snap.adj)) * events)
         self.ledger.record_local_step(
             int(snap.device_up.sum()) * self.scale.tau)
-        return loss
 
     def save(self, path: Optional[str] = None):
         p = path or str(Path(self.tcfg.ckpt_dir)
                         / f"interval_{self.interval:06d}.npz")
         Path(p).parent.mkdir(parents=True, exist_ok=True)
-        save_train_state(p, self.params, (), self.interval)
+        # resume fidelity: the PRNG key, the comm ledger, and the data
+        # stream positions all travel with the params — a restored run
+        # continues exactly where an uninterrupted one would be
+        extra = {
+            "key": np.asarray(self.key),
+            "train_draws": np.asarray(self._train_draws),
+            "eval_draws": np.asarray(self._eval_draws),
+            "ledger": {k: np.asarray(v) for k, v in
+                       dataclasses.asdict(self.ledger).items()
+                       if not isinstance(v, dict)},
+            "uplinks_by_level": {
+                str(k): np.asarray(v)
+                for k, v in self.ledger.uplinks_by_level.items()},
+        }
+        if self.tree is not None:
+            extra["global"] = self._global   # the served root snapshot
+        save_train_state(p, self.params, (), self.interval, extra=extra)
         return p
 
     def restore(self, path: str):
-        self.params, _, self.interval, _ = restore_train_state(path)
+        self.params, _, self.interval, extra = restore_train_state(path)
+        if self.tree is not None:
+            # the served root snapshot (pre-hierarchy checkpoints lack
+            # it: fall back to replica 0, exact from the next root on)
+            self._global = extra.get(
+                "global", jax.tree.map(lambda l: l[0], self.params))
+        if "key" in extra:
+            self.key = jnp.asarray(extra["key"])
+            self._train_draws = int(extra["train_draws"])
+            self._eval_draws = int(extra["eval_draws"])
+            for k, v in extra["ledger"].items():
+                setattr(self.ledger, k, type(getattr(self.ledger, k))(v))
+            self.ledger.uplinks_by_level = {
+                int(k): int(v)
+                for k, v in extra.get("uplinks_by_level", {}).items()}
+            # fast-forward FRESH data streams past the consumed batches
+            # (a reused trainer's generators may already be advanced;
+            # the rng positions are only reachable by drawing, so resume
+            # cost grows with training progress — fine at checkpointing
+            # cadence, not for epoch-scale skips)
+            self._make_gens()
+            for _ in range(self._train_draws):
+                for g in self._gens:
+                    next(g)
+            for _ in range(self._eval_draws):
+                next(self._eval_gen)
         return self
 
     # ------------------------------------------------------------------
@@ -173,7 +317,9 @@ class ScaleTrainer:
         for _ in range(n):
             batch = self._interval_batch()
             self.key, kp = jax.random.split(self.key)
-            if self.tvnet is None:
+            if self.tree is not None:
+                loss = self._hierarchical_interval(batch, kp, events)
+            elif self.tvnet is None:
                 picks = jax.random.randint(
                     kp, (self.net.num_clusters,), 0,
                     self.scale.cluster_size)

@@ -1,0 +1,318 @@
+"""Multi-stage fog hierarchy (repro.hierarchy, DESIGN.md §9): tree
+construction, per-level weight-matrix invariants under churn, L=2
+degeneracy (bit-for-bit flat TT-HF in both trainers), and multi-level
+runs in sim and scale mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (DynamicsConfig, HierarchyConfig,
+                           TopologyConfig, TTHFConfig)
+from repro.core import TTHFTrainer
+from repro.core import sampling as smp
+from repro.data import fashion_synth, partition_noniid_labels
+from repro.hierarchy import (build_event, build_tree, interval_depth,
+                             presets)
+from repro.models import make_sim_model
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    x, y = fashion_synth(num_points=800, seed=0)
+    data = partition_noniid_labels(x, y, num_devices=24)
+    topo = TopologyConfig(num_devices=24, num_clusters=8,
+                          graph="geometric", seed=0)
+    model = make_sim_model("svm", 784, 10)
+    return data, topo, model
+
+
+ALGO = TTHFConfig(tau=5, consensus_every=5, gamma_d2d=2,
+                  constant_lr=0.002)
+
+
+def _run(fleet, algo, hier=None, dyn=None, steps=20):
+    data, topo, model = fleet
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=8,
+                     dynamics=dyn, hierarchy=hier)
+    st, h = tr.run(steps=steps, eval_every=5, seed=0)
+    return tr, st, h
+
+
+# ---------------------------------------------------------------------------
+# tree + calendar
+# ---------------------------------------------------------------------------
+
+def test_tree_shapes_and_mass():
+    tree = build_tree(presets.get("fog4", tau=5), num_clusters=8,
+                      cluster_size=3)
+    assert tree.node_counts == (8, 4, 2, 1)
+    for level, m in enumerate(tree.mass):
+        assert m.shape == (tree.node_counts[level],)
+        np.testing.assert_allclose(m.sum(), 1.0)
+    np.testing.assert_allclose(tree.mass[0], np.full(8, 1 / 8))
+    # contiguous grouping and full ancestor chains
+    assert tree.ancestors(2).tolist() == [0, 0, 0, 0, 1, 1, 1, 1]
+    assert tree.device_ancestors(3).tolist() == [0] * 24
+
+
+def test_auto_branching_needs_divisors():
+    with pytest.raises(ValueError, match="divisor"):
+        build_tree(HierarchyConfig(levels=4, taus=(5, 10, 20),
+                                   sample=(1, 0, 0)),
+                   num_clusters=5, cluster_size=2)
+
+
+def test_interval_depth_nesting():
+    taus = (5, 10, 20)
+    depths = {t: interval_depth(t, taus) for t in range(0, 41, 5)}
+    assert depths == {0: 0, 5: 1, 10: 2, 15: 1, 20: 3, 25: 1, 30: 2,
+                      35: 1, 40: 3}
+
+
+# ---------------------------------------------------------------------------
+# per-level weight-matrix invariants
+# ---------------------------------------------------------------------------
+
+def test_level_matrices_sum_to_one_under_churn():
+    """Every tier's matrix: live parents' weight vectors over their
+    children sum to exactly 1 (dark/unsampled mass renormalized away,
+    like netsim's dark clusters); dark parents' rows are all zero."""
+    cfg = presets.get("fog4", tau=5)
+    tree = build_tree(cfg, num_clusters=8, cluster_size=3)
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        up = rng.random((8, 3)) > 0.4        # heavy churn, dark clusters
+        ev = build_event(np.random.default_rng(trial), tree, cfg,
+                         t=20, device_up=up)
+        A, *Gs = ev.level_weights
+        live = up.any(axis=1)
+        np.testing.assert_allclose(A.sum(1), np.where(live, 1.0, 0.0),
+                                   atol=1e-12)
+        for G in Gs:
+            sums = G.sum(1)
+            assert np.all((np.abs(sums - 1.0) < 1e-12) | (sums == 0.0))
+        # composed device matrix: receiving rows sum to 1, every other
+        # row is exactly the identity row (hold-your-parameters)
+        M = ev.device_matrix
+        rows = M.sum(1)
+        eye = np.eye(24, dtype=np.float32)
+        for i in range(24):
+            if not np.array_equal(M[i], eye[i]):
+                assert abs(rows[i] - 1.0) < 1e-6
+
+
+def test_all_dark_event_is_identity():
+    cfg = presets.get("fog3", tau=5)
+    tree = build_tree(cfg, num_clusters=4, cluster_size=2)
+    ev = build_event(np.random.default_rng(0), tree, cfg, t=10,
+                     device_up=np.zeros((4, 2), bool))
+    assert ev.total_uplinks == 0
+    np.testing.assert_array_equal(ev.device_matrix, np.eye(8))
+
+
+def test_flat_event_matches_flat_aggregation():
+    """An all-up L=2 event with k=1 composes to exactly the paper's
+    eq. (7): every device receives the varrho-weighted sampled model."""
+    cfg = presets.get("flat", tau=5)
+    tree = build_tree(cfg, num_clusters=4, cluster_size=3)
+    ev = build_event(np.random.default_rng(3), tree, cfg, t=5,
+                     device_up=np.ones((4, 3), bool))
+    assert ev.depth == 1 and ev.uplinks_by_level == {1: 4}
+    picks = jnp.asarray(ev.picks[:, 0])
+    varrho = jnp.full((4,), 0.25, jnp.float32)
+    params = {"w": jnp.asarray(
+        np.random.default_rng(0).normal(size=(12, 6)), jnp.float32)}
+    g = smp.sampled_global_pytree(params, picks, varrho, 4)
+    from repro.hierarchy import apply_device_matrix_pytree
+    out = apply_device_matrix_pytree(params,
+                                     jnp.asarray(ev.device_matrix))
+    for r in range(12):
+        np.testing.assert_allclose(np.asarray(out["w"][r]),
+                                   np.asarray(g["w"]), atol=1e-6)
+
+
+def test_offline_devices_hold_params_through_broadcast():
+    cfg = presets.get("fog3", tau=5)
+    tree = build_tree(cfg, num_clusters=4, cluster_size=2)
+    up = np.ones((4, 2), bool)
+    up[1, 0] = False
+    ev = build_event(np.random.default_rng(0), tree, cfg, t=10,
+                     device_up=up, receive_offline=False)
+    params = {"w": jnp.asarray(
+        np.random.default_rng(1).normal(size=(8, 3)), jnp.float32)}
+    from repro.hierarchy import apply_device_matrix_pytree
+    out = apply_device_matrix_pytree(params,
+                                     jnp.asarray(ev.device_matrix))
+    np.testing.assert_array_equal(np.asarray(out["w"][2]),
+                                  np.asarray(params["w"][2]))
+
+
+# ---------------------------------------------------------------------------
+# simulation mode
+# ---------------------------------------------------------------------------
+
+def test_flat_hierarchy_is_bit_for_bit_sim(fleet):
+    _, _, h0 = _run(fleet, ALGO, hier=None)
+    _, _, h1 = _run(fleet, ALGO, hier=presets.get("flat", tau=5))
+    assert h0.global_loss == h1.global_loss      # exact float equality
+    assert h0.global_acc == h1.global_acc
+    assert h0.dispersion == h1.dispersion
+
+
+def test_fog3_sim_levels_and_ledger(fleet):
+    tr, st, h = _run(fleet, ALGO, hier=presets.get("fog3", tau=5))
+    assert all(np.isfinite(h.global_loss))
+    # 4 tier-1 events x 8 clusters; 2 root events x 4 edge nodes
+    assert tr.ledger.uplinks_by_level == {1: 32, 2: 8}
+    assert tr.ledger.uplinks == 40
+
+
+def test_fog4_root_event_syncs_all_devices(fleet):
+    tr, st, _ = _run(fleet, ALGO, hier=presets.get("fog4", tau=5))
+    # steps=20 == the fog4 root period: everyone holds the root model
+    for leaf in jax.tree.leaves(st.params):
+        arr = np.asarray(leaf)
+        np.testing.assert_array_equal(arr, np.broadcast_to(arr[0:1],
+                                                           arr.shape))
+    assert tr.ledger.uplinks_by_level == {1: 32, 2: 8, 3: 2}
+
+
+def test_fog3_sim_under_churn_stays_finite(fleet):
+    dyn = DynamicsConfig(name="churny", p_device_drop=0.2,
+                         p_device_return=0.3, seed=1)
+    tr, _, h = _run(fleet, ALGO, hier=presets.get("fog3", tau=5),
+                    dyn=dyn)
+    assert all(np.isfinite(h.global_loss))
+    # churn can only remove uplinks relative to the all-up calendar
+    assert tr.ledger.uplinks_by_level.get(1, 0) <= 32
+    assert tr.ledger.uplinks_by_level.get(2, 0) <= 8
+
+
+def test_hierarchy_rejects_mismatched_tau(fleet):
+    data, topo, model = fleet
+    with pytest.raises(AssertionError, match="tier-1 period"):
+        TTHFTrainer(model, data, topo, ALGO, batch_size=8,
+                    hierarchy=presets.get("fog3", tau=10))
+
+
+def test_flat_hierarchy_is_identity_for_baselines(fleet):
+    """'flat' is the identity preset: combined with a baseline (or any
+    knob mismatch) it is simply ignored — plain TT-HF semantics."""
+    from repro.core import make_baseline_config
+    data, topo, model = fleet
+    algo = make_baseline_config("fedavg", tau=10)
+    tr = TTHFTrainer(model, data, topo, algo, batch_size=8,
+                     hierarchy=presets.get("flat", tau=5))
+    assert tr.tree is None
+    _, h = tr.run(steps=10, eval_every=10, seed=0)
+    assert all(np.isfinite(h.global_loss))
+
+
+# ---------------------------------------------------------------------------
+# scale mode
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def scale_world():
+    from repro.configs import get_arch
+    from repro.core.distributed import TTHFScaleConfig
+    from repro.train import TrainerConfig
+    cfg = get_arch("qwen1.5-0.5b").reduced(num_layers=2, d_model=64,
+                                           d_ff=128, vocab_size=128)
+    scale = TTHFScaleConfig(replicas=8, cluster_size=2, tau=2,
+                            consensus_every=2, gamma_d2d=2, lr=0.05)
+    tcfg = TrainerConfig(batch_per_replica=2, seq_len=16, intervals=4,
+                         eval_every=0, eval_batches=1)
+    return cfg, scale, tcfg
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_flat_hierarchy_is_bit_for_bit_scale(scale_world):
+    from repro.train import ScaleTrainer
+    cfg, scale, tcfg = scale_world
+    tr0 = ScaleTrainer(cfg, scale, tcfg).init()
+    tr0.run()
+    tr1 = ScaleTrainer(cfg, scale, tcfg,
+                       hierarchy=presets.get("flat", tau=2)).init()
+    tr1.run()
+    assert _leaves_equal(tr0.params, tr1.params)
+    assert tr0.ledger == tr1.ledger
+
+
+def test_fog3_scale_levels_and_root_sync(scale_world):
+    from repro.train import ScaleTrainer
+    cfg, scale, tcfg = scale_world
+    tr = ScaleTrainer(cfg, scale, tcfg,
+                      hierarchy=presets.get("fog3", tau=2)).init()
+    tr.run()
+    # 4 intervals x 4 clusters; root fires every 2nd interval x 2 nodes
+    assert tr.ledger.uplinks_by_level == {1: 16, 2: 4}
+    for leaf in jax.tree.leaves(tr.params):
+        arr = np.asarray(leaf)
+        assert np.isfinite(arr).all()
+        # interval 4 was a root event: all replicas agree
+        np.testing.assert_allclose(arr, np.broadcast_to(arr[0:1],
+                                                        arr.shape),
+                                   atol=1e-6)
+
+
+def test_scale_hierarchy_serves_root_model(scale_world):
+    """Between root events the served (eval) model is the LAST root
+    snapshot — not whatever subtree model replica 0 happens to hold."""
+    from repro.train import ScaleTrainer
+    cfg, scale, tcfg = scale_world
+    tr = ScaleTrainer(cfg, scale, tcfg,
+                      hierarchy=presets.get("fog3", tau=2)).init()
+    init_global = jax.tree.map(np.asarray, tr._global_params())
+    tr.run(1)                       # tier 1 only: root not fired yet
+    assert _leaves_equal(tr._global_params(), init_global)
+    tr.run(1)                       # interval 2 is a root event
+    assert _leaves_equal(tr._global_params(),
+                         jax.tree.map(lambda l: l[0], tr.params))
+    assert not _leaves_equal(tr._global_params(), init_global)
+
+
+def test_fog3_scale_under_churn(scale_world):
+    from repro.netsim import scenarios
+    from repro.train import ScaleTrainer
+    cfg, scale, tcfg = scale_world
+    tr = ScaleTrainer(cfg, scale, tcfg,
+                      hierarchy=presets.get("fog3", tau=2),
+                      dynamics=scenarios.get("device_churn", seed=3)
+                      ).init()
+    tr.run()
+    assert tr.interval == 4
+    for leaf in jax.tree.leaves(tr.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert tr.ledger.uplinks_by_level[1] <= 16
+
+
+def test_scale_rejects_mismatched_fan_in(scale_world):
+    """scale.sample_per_cluster and the tier-1 fan-in must agree —
+    a silent mismatch would sample with the wrong k."""
+    import dataclasses
+    from repro.train import ScaleTrainer
+    cfg, scale, tcfg = scale_world
+    bad = dataclasses.replace(scale, sample_per_cluster=2)
+    with pytest.raises(AssertionError, match="fan-in"):
+        ScaleTrainer(cfg, bad, tcfg, hierarchy=presets.get("fog3", tau=2))
+
+
+def test_presets_registry():
+    assert set(presets.names()) >= {"flat", "fog3", "fog4",
+                                    "fog3_sampled"}
+    h = presets.get("fog3_sampled", tau=10)
+    assert h.levels == 3 and h.taus == (10, 20) and h.sample == (1, 2)
+    with pytest.raises(KeyError):
+        presets.get("nope")
+    with pytest.raises(AssertionError):
+        HierarchyConfig(levels=3, taus=(5, 12), sample=(1, 0))
+    with pytest.raises(AssertionError, match="branching"):
+        # partial branching: must be empty (auto) or cover every tier
+        HierarchyConfig(levels=4, branching=(2,), taus=(5, 10, 20),
+                        sample=(1, 0, 0))

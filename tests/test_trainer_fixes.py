@@ -1,0 +1,155 @@
+"""Regression tests for the scale-mode correctness fixes: multi-sample
+aggregation matches its billing, checkpoint paths normalize, resume is
+bit-for-bit faithful, and dtype strings are validated."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DynamicsConfig, get_arch
+from repro.core.distributed import (TTHFScaleConfig, stack_replicas,
+                                    weighted_aggregation)
+from repro.netsim import faults
+from repro.train import ScaleTrainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_arch("qwen1.5-0.5b").reduced(num_layers=2, d_model=64,
+                                            d_ff=128, vocab_size=128)
+
+
+# ---------------------------------------------------------------------------
+# scale-mode multi-sampling: the aggregate must contain exactly the
+# models the ledger bills
+# ---------------------------------------------------------------------------
+
+def test_weighted_aggregation_uses_all_sampled_models():
+    """With sample_per_cluster = k > 1 the (N, s) weight matrix routes
+    ALL k picks into the aggregate — parity with the sim path's
+    multi-sample eq. (7)."""
+    from repro.core import sampling as smp
+    N, s, k = 4, 4, 3
+    scale = TTHFScaleConfig(replicas=N * s, cluster_size=s,
+                            sample_per_cluster=k)
+    net = scale.network()
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(N * s, 6)), jnp.float32)}
+    picks = np.asarray(smp.sample_devices_multi(
+        jax.random.PRNGKey(1), N, s, k))
+    counts = np.full(N, k)
+    w = faults.aggregation_weights(picks, counts,
+                                   np.asarray(net.varrho), s)
+    out = weighted_aggregation(params, net, jnp.asarray(w, jnp.float32))
+    expect = smp.sampled_global_pytree(
+        params, jnp.asarray(picks),
+        jnp.asarray(net.varrho, jnp.float32), N)
+    for r in range(N * s):
+        np.testing.assert_allclose(np.asarray(out["w"][r]),
+                                   np.asarray(expect["w"]), atol=1e-6)
+    # billing == models entering the aggregate == nonzero weights
+    assert int(counts.sum()) == int((w > 0).sum()) == N * k
+
+
+def test_weighted_aggregation_all_dark_is_identity():
+    scale = TTHFScaleConfig(replicas=4, cluster_size=2)
+    net = scale.network()
+    params = {"w": jnp.asarray(
+        np.random.default_rng(0).normal(size=(4, 3)), jnp.float32)}
+    out = weighted_aggregation(params, net,
+                               jnp.zeros((2, 2), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(params["w"]))
+
+
+def test_dynamic_multi_sampling_ledger_matches_uplinks(tiny_cfg):
+    """Link-flapping dynamics (devices all up) with k = 2: every
+    interval bills N * k uplinks and the aggregate is the k-average —
+    previously only picks[:, 0] entered while N * k was billed."""
+    scale = TTHFScaleConfig(replicas=8, cluster_size=2, tau=2,
+                            consensus_every=2, gamma_d2d=1, lr=0.05,
+                            sample_per_cluster=2)
+    dyn = DynamicsConfig(name="flappy", p_link_fail=0.3,
+                         p_link_recover=0.5, seed=1)
+    tcfg = TrainerConfig(batch_per_replica=2, seq_len=16, intervals=3,
+                         eval_every=0, eval_batches=1)
+    tr = ScaleTrainer(tiny_cfg, scale, tcfg, dynamics=dyn).init()
+    tr.run()
+    assert tr.ledger.uplinks == 3 * scale.num_clusters * 2
+    for leaf in jax.tree.leaves(tr.params):
+        arr = np.asarray(leaf)
+        assert np.isfinite(arr).all()
+        # aggregation broadcast: replicas agree after every interval
+        np.testing.assert_allclose(arr, np.broadcast_to(arr[0:1],
+                                                        arr.shape),
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint path normalization
+# ---------------------------------------------------------------------------
+
+def test_extensionless_ckpt_path_roundtrips(tmp_path):
+    from repro.checkpoint import restore_pytree, save_pytree
+    tree = {"a": np.arange(6).reshape(2, 3), "b": (np.ones(2),)}
+    p = str(tmp_path / "state")            # np.savez appends .npz
+    save_pytree(p, tree)
+    loaded = restore_pytree(p)             # used to FileNotFoundError
+    np.testing.assert_array_equal(loaded["a"], tree["a"])
+    # explicit .npz keeps working
+    save_pytree(str(tmp_path / "s2.npz"), tree)
+    loaded2 = restore_pytree(str(tmp_path / "s2.npz"))
+    np.testing.assert_array_equal(loaded2["b"][0], tree["b"][0])
+
+
+# ---------------------------------------------------------------------------
+# resume fidelity
+# ---------------------------------------------------------------------------
+
+def test_resume_equals_straight_through_run(tmp_path, tiny_cfg):
+    """save -> restore -> run must reproduce the uninterrupted run
+    exactly: same params, same ledger, no re-trained batches. The PRNG
+    key, ledger counters and data-stream offsets all travel in the
+    checkpoint's extra dict."""
+    scale = TTHFScaleConfig(replicas=4, cluster_size=2, tau=2,
+                            consensus_every=2, gamma_d2d=1, lr=0.05)
+    tcfg = TrainerConfig(batch_per_replica=2, seq_len=16, intervals=4,
+                         eval_every=2, eval_batches=1,
+                         ckpt_dir=str(tmp_path))
+    straight = ScaleTrainer(tiny_cfg, scale, tcfg).init()
+    straight.run(4)
+
+    first = ScaleTrainer(tiny_cfg, scale, tcfg).init()
+    first.run(2)
+    path = first.save()
+    resumed = ScaleTrainer(tiny_cfg, scale, tcfg).restore(path)
+    assert resumed.interval == 2
+    resumed.run(2)
+
+    for a, b in zip(jax.tree.leaves(straight.params),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert dataclasses.asdict(straight.ledger) == \
+        dataclasses.asdict(resumed.ledger)
+
+    # in-process rollback: restoring into a trainer whose generators
+    # have already advanced must rebuild the streams, not double-skip
+    first.run(1)                    # drift past the checkpoint
+    first.restore(path)
+    first.run(2)
+    for a, b in zip(jax.tree.leaves(straight.params),
+                    jax.tree.leaves(first.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# dtype validation
+# ---------------------------------------------------------------------------
+
+def test_trainer_config_rejects_unknown_dtype():
+    with pytest.raises(ValueError, match="float16"):
+        TrainerConfig(dtype="float16")     # typo'd: used to mean bf16
+    assert TrainerConfig(dtype="bfloat16").dtype == "bfloat16"
+    assert TrainerConfig().dtype == "float32"
