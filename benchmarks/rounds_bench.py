@@ -1,0 +1,85 @@
+"""Round-program hot-loop benchmark (DESIGN.md §10).
+
+The unified sim loop dispatches per *event*, not per iteration: the
+resolver knows the calendar ahead of time, so every local-SGD span
+between two communication/eval events runs as ONE jitted ``lax.scan``.
+This sweep measures steps/sec of the per-iteration dispatch cadence
+(``chunked=False`` — exactly the pre-engine loops' dispatch pattern)
+against the event-chunked scan (``chunked=True``) on the same worlds,
+asserts the trajectories are bitwise identical (the scan is a pure
+execution-strategy change), and appends the speedups to
+``BENCH_rounds.json``.
+
+Cases: a dense event calendar (consensus every 5 — spans of 5), a
+sparse one (consensus every tau — spans of 20, the large-tau regime
+the paper's Fig. 5 sweeps), and device churn (per-iteration host
+snapshots still tick inside the span; only the SGD dispatch is
+batched).
+
+Row ``derived``: steps_per_sec=..;speedup=..;bitwise_equal=..
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, append_trajectory, sim_world
+
+LR = 0.002
+
+
+def _trainer(data, topo, model, algo, dyn, chunked):
+    from repro.core import TTHFTrainer
+    return TTHFTrainer(model, data, topo, algo, batch_size=16,
+                       dynamics=dyn, chunked=chunked)
+
+
+def _run(tr, steps, eval_every):
+    t0 = time.perf_counter()
+    _, hist = tr.run(steps=steps, eval_every=eval_every, seed=0,
+                     record_dispersion=False)
+    return time.perf_counter() - t0, hist
+
+
+def run(scale: str = "ci", seed: int = 0) -> list[Row]:
+    from repro.configs import TTHFConfig
+    from repro.netsim import scenarios
+
+    data, topo, model, _ = sim_world(scale, seed)
+    steps = 400 if scale == "paper" else 120
+
+    cases = {
+        "dense_events": (TTHFConfig(tau=20, consensus_every=5,
+                                    gamma_d2d=2, constant_lr=LR), None),
+        "sparse_events": (TTHFConfig(tau=20, consensus_every=20,
+                                     gamma_d2d=2, constant_lr=LR), None),
+        "churn": (TTHFConfig(tau=20, consensus_every=5, gamma_d2d=2,
+                             constant_lr=LR),
+                  scenarios.get("device_churn", seed=seed)),
+    }
+
+    rows = []
+    for name, (algo, dyn) in cases.items():
+        eval_every = algo.tau
+        results = {}
+        for mode, chunked in (("stepwise", False), ("scanned", True)):
+            tr = _trainer(data, topo, model, algo, dyn, chunked)
+            _run(tr, eval_every, eval_every)       # warmup: compile
+            wall, hist = _run(tr, steps, eval_every)
+            results[mode] = (wall, hist, tr.ledger)
+            rows.append(Row(f"rounds/{name}_{mode}", wall * 1e6,
+                            f"steps_per_sec={steps / wall:.1f}"))
+        (w0, h0, l0), (w1, h1, l1) = results["stepwise"], results["scanned"]
+        same = (h0.global_loss == h1.global_loss
+                and h0.global_acc == h1.global_acc
+                and l0.uplinks == l1.uplinks
+                and l0.d2d_msgs == l1.d2d_msgs
+                and all(np.array_equal(a, b)
+                        for a, b in zip(h0.gamma_used, h1.gamma_used)))
+        rows.append(Row(f"rounds/{name}_speedup", 0.0,
+                        f"speedup={w0 / w1:.2f}x;"
+                        f"bitwise_equal={same};"
+                        f"final_loss={h1.global_loss[-1]:.4f}"))
+    append_trajectory("rounds", rows, scale)
+    return rows

@@ -176,12 +176,14 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
 
     * default — ``picks``: (N,) int32 sampled representative per
       cluster (the historical signature, bit-for-bit preserved);
-    * ``refreshable=True`` (netsim dynamics) — ``agg_w``: the (N, s)
-      per-device aggregation weight matrix from
+    * ``sample_per_cluster > 1`` or ``refreshable=True`` — ``agg_w``:
+      the (N, s) per-device aggregation weight matrix from
       :func:`repro.netsim.faults.aggregation_weights`. All k sampled
       replicas per cluster enter the aggregate (the multi-sampling
-      the ledger bills), dark clusters carry weight 0, and an all-dark
-      event is the identity. The step also takes ``mix_refresh``, the
+      the ledger bills — the static path used to draw ONE device and
+      bill N uplinks), dark clusters carry weight 0, and an all-dark
+      event is the identity. ``refreshable=True`` (netsim dynamics)
+      additionally takes ``mix_refresh``, the
       per-aggregation-round consensus matrices from
       :func:`repro.core.mixing.refresh_matrices` (stacked powers
       ``W = V^Gamma`` for the ``fused`` backend, the masked ``V``
@@ -239,9 +241,13 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
             params, grads)
         return params, jnp.mean(losses)
 
-    # one aggregation form per build — the jitted step traces exactly once
+    # one aggregation form per build — the jitted step traces exactly
+    # once; multi-sampling routes through the (N, s) weight form so
+    # every billed uplink actually enters the aggregate
     agg_kind = ("matrix" if hierarchy is not None
-                else "weights" if refreshable else "picks")
+                else "weights" if (refreshable or
+                                   scale.sample_per_cluster > 1)
+                else "picks")
 
     def interval(params, batch, agg, mix_refresh):
         lr = jnp.asarray(scale.lr, jnp.float32)

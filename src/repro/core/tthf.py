@@ -6,6 +6,14 @@ stacked device fleet: every pytree leaf carries a leading device axis
 to ``(N, s, M)`` and applies the block-diagonal mixing; aggregations
 implement the cluster-sampled global model of eq. (7).
 
+Every scenario — static, netsim dynamics, fog hierarchy, and their
+compositions — runs through ONE loop: a
+:class:`~repro.rounds.resolver.RoundResolver` turns the declarative
+:class:`~repro.rounds.program.RoundProgram` into per-round events, and
+the local-SGD iterations between events execute as one jitted
+``lax.scan`` (DESIGN.md §10), so the host dispatches per *event*
+rather than per iteration.
+
 Baselines (Sec. IV-B) are the same engine with ``mode``:
   * ``tthf``        — Algorithm 1 (sampled aggregation + D2D consensus)
   * ``fedavg``      — star FL, full participation, no D2D (tau as given)
@@ -32,6 +40,7 @@ from repro.core.schedule import adaptive_gamma, fixed_gamma, make_lr_schedule
 from repro.core.topology import Network, build_network
 from repro.data.synth import FederatedDataset
 from repro.models.simple import SimModel
+from repro.rounds import RoundProgram, RoundResolver
 
 
 @dataclass
@@ -67,7 +76,9 @@ class TTHFTrainer:
                  eval_y: np.ndarray | None = None,
                  use_kernel: bool = False, backend: str | None = None,
                  dynamics: Optional[DynamicsConfig] = None,
-                 hierarchy: Optional[HierarchyConfig] = None):
+                 hierarchy: Optional[HierarchyConfig] = None,
+                 program: Optional[RoundProgram] = None,
+                 chunked: bool = True):
         assert data.num_devices == topo_cfg.num_devices
         assert 1 <= algo.sample_per_cluster <= topo_cfg.cluster_size, \
             "sample_per_cluster must be within the cluster size"
@@ -77,31 +88,26 @@ class TTHFTrainer:
         self.net: Network = build_network(topo_cfg)
         self.batch_size = batch_size
         self.use_kernel = use_kernel
-        # netsim dynamics: a static (or absent) config takes the exact
-        # historical code path below — bit-for-bit trajectories
-        self.dynamics = dynamics
-        self.tvnet = None
-        if dynamics is not None and not dynamics.is_static:
-            from repro.netsim.dynamics import TimeVaryingNetwork
-            self.tvnet = TimeVaryingNetwork(self.net, dynamics,
-                                            weights=topo_cfg.weights)
-        # multi-stage fog hierarchy (repro.hierarchy): a flat (L = 2)
-        # config IS two-timescale TT-HF — it adds nothing, so it is
-        # ignored entirely (the TT-HF knobs come from ``algo``) and the
-        # historical code path below runs bit-for-bit
-        self.hierarchy = None
-        self.tree = None
-        if hierarchy is not None and not hierarchy.is_flat:
-            assert algo.mode == "tthf" and not algo.full_participation, \
-                "hierarchical aggregation implies sampled tthf mode"
-            assert hierarchy.taus[0] == algo.tau, \
-                f"tier-1 period {hierarchy.taus[0]} must equal tau={algo.tau}"
-            assert hierarchy.sample[0] == algo.sample_per_cluster, \
-                "tier-1 fan-in must equal sample_per_cluster"
-            from repro.hierarchy import build_tree
-            self.hierarchy = hierarchy
-            self.tree = build_tree(hierarchy, self.net.num_clusters,
-                                   self.net.cluster_size)
+        # the declarative round program (DESIGN.md §10): a static (or
+        # absent) dynamics config and a flat (L = 2) hierarchy resolve
+        # to the exact historical code path — bit-for-bit trajectories.
+        # ``dynamics``/``hierarchy`` kwargs are sugar for a program.
+        if program is None:
+            program = RoundProgram(dynamics=dynamics, hierarchy=hierarchy)
+        else:
+            assert dynamics is None and hierarchy is None, \
+                "pass either program= or the dynamics=/hierarchy= sugar " \
+                "kwargs, not both (the kwargs would be silently ignored)"
+        self.program = program
+        self._resolver = RoundResolver.for_sim(
+            self.net, algo, program, topo_weights=topo_cfg.weights)
+        self.dynamics = program.dynamics
+        self.hierarchy = self._resolver.hierarchy
+        self.tvnet = self._resolver.tvnet
+        self.tree = self._resolver.tree
+        # chunked=False forces per-iteration spans — the pre-engine
+        # dispatch cadence, kept as the benchmark baseline
+        self.chunked = chunked
         # consensus backend (core/mixing.py): gamma is traced inside the
         # jitted consensus (Remark-1 adaptive rounds), so the default is
         # the masked bounded loop; use_kernel routes through Pallas.
@@ -135,6 +141,10 @@ class TTHFTrainer:
         # matrix and the root's (I,) source weights are call arguments
         self._apply_event = jax.jit(self._apply_event_impl)
         self._global_from_weights = jax.jit(self._global_from_weights_impl)
+        # the event-chunked hot loop: every local-SGD iteration between
+        # two round-program events runs inside ONE scan dispatch
+        self._scan_local = jax.jit(self._scan_local_impl)
+        self._scan_local_dyn = jax.jit(self._scan_local_dyn_impl)
 
     # ------------------------------------------------------------------
     def init(self, seed: int = 0) -> TTHFState:
@@ -225,6 +235,38 @@ class TTHFTrainer:
 
         return jax.tree.map(freeze, stepped, params)
 
+    # ------------------------------------------------------------------
+    # event-chunked local spans: the resolver knows the next event
+    # boundary ahead of time, so the n pure local-SGD iterations up to
+    # it run as ONE lax.scan — one dispatch per event, not per
+    # iteration. The scan body splits the PRNG key exactly as the
+    # per-iteration loop did (and carries the boundary's k_agg out),
+    # so trajectories are bit-for-bit identical (tests/test_rounds.py).
+    # ------------------------------------------------------------------
+    def _scan_local_impl(self, params, key, etas):
+        def body(carry, eta):
+            params, key, _ = carry
+            key, k_step, k_agg = jax.random.split(key, 3)
+            params = self._local_step_impl(params, k_step, eta)
+            return (params, key, k_agg), None
+
+        (params, key, k_agg), _ = jax.lax.scan(
+            body, (params, key, key), etas)
+        return params, key, k_agg
+
+    def _scan_local_dyn_impl(self, params, key, etas, up_masks):
+        def body(carry, x):
+            eta, up_flat = x
+            params, key, _ = carry
+            key, k_step, k_agg = jax.random.split(key, 3)
+            params = self._local_step_dyn_impl(params, k_step, eta,
+                                               up_flat)
+            return (params, key, k_agg), None
+
+        (params, key, k_agg), _ = jax.lax.scan(
+            body, (params, key, key), (etas, up_masks))
+        return params, key, k_agg
+
     def _consensus_dyn_impl(self, params, V, gamma):
         return mixing.mix_pytree(params, V, gamma,
                                  self.net.num_clusters,
@@ -261,51 +303,62 @@ class TTHFTrainer:
         return jnp.max(jnp.stack(ups), axis=0)
 
     # ------------------------------------------------------------------
-    # consensus events — shared by the static, dynamic and hierarchical
-    # loops (one home for the gamma schedule + ledger billing)
+    # round-program events — ONE home for the gamma schedule and the
+    # aggregation operators across every scenario (DESIGN.md §10)
     # ------------------------------------------------------------------
-    def _consensus_event_static(self, st, eta_t) -> np.ndarray:
-        """One consensus event on the base topology; mutates st.params,
-        bills the ledger, returns the per-cluster rounds used."""
+    def _consensus_event(self, st, spec, eta_t) -> np.ndarray:
+        """One consensus event from a resolved
+        :class:`~repro.rounds.program.ConsensusSpec`; mutates
+        st.params and returns the per-cluster rounds used. A static
+        spec mixes on the base topology; a dynamic one mixes on the
+        event's active subgraph — clusters with no live edge have
+        nothing to exchange, so they neither run nor bill rounds
+        (covers lambda=0 under the adaptive rule too)."""
         algo = self.algo
+        if not spec.dynamic:
+            if algo.gamma_d2d >= 0:
+                gamma = fixed_gamma(self.net.num_clusters, algo.gamma_d2d)
+            else:
+                ups = self._upsilon(st.params)
+                gamma = adaptive_gamma(eta_t, algo.phi, ups, self.lambdas,
+                                       self.net.cluster_size,
+                                       self.model_dim)
+            st.params = self._consensus(st.params, gamma)
+            return np.asarray(gamma)
         if algo.gamma_d2d >= 0:
             gamma = fixed_gamma(self.net.num_clusters, algo.gamma_d2d)
         else:
-            ups = self._upsilon(st.params)
-            gamma = adaptive_gamma(eta_t, algo.phi, ups, self.lambdas,
-                                   self.net.cluster_size, self.model_dim)
-        st.params = self._consensus(st.params, gamma)
-        gamma_used = np.asarray(gamma)
-        self.ledger.record_consensus(gamma_used, self._edges)
-        return gamma_used
-
-    def _consensus_event_dynamic(self, st, snap, eta_t, up) -> np.ndarray:
-        """One consensus event on the snapshot's active subgraph.
-        Clusters with no live edge have nothing to exchange: mixing
-        there is the identity, so neither run nor bill rounds (covers
-        lambda=0 under the adaptive rule too)."""
-        from repro.netsim import faults
-
-        algo = self.algo
-        if algo.gamma_d2d >= 0:
-            gamma = fixed_gamma(self.net.num_clusters, algo.gamma_d2d)
-        else:
-            ups = self._upsilon_dyn(st.params, up)
+            ups = self._upsilon_dyn(st.params, jnp.asarray(spec.device_up))
             gamma = adaptive_gamma(
                 eta_t, algo.phi, ups,
-                jnp.asarray(snap.lambdas, jnp.float32),
-                jnp.asarray(snap.active_per_cluster, jnp.int32),
+                jnp.asarray(spec.lambdas, jnp.float32),
+                jnp.asarray(spec.active_sizes, jnp.int32),
                 self.model_dim)
-        gamma = jnp.where(
-            jnp.asarray(snap.num_active_edges()) == 0, 0, gamma)
+        gamma = jnp.where(jnp.asarray(spec.edges) == 0, 0, gamma)
         st.params = self._consensus_dyn(
-            st.params, jnp.asarray(snap.V), gamma)
-        gamma_used = np.asarray(gamma)
-        self.ledger.record_consensus(
-            gamma_used, snap.num_active_edges(),
-            tail_mult_per_cluster=faults.consensus_tail_mult(
-                snap.delay_mult, snap.device_up, snap.adj))
-        return gamma_used
+            st.params, jnp.asarray(spec.V), gamma)
+        return np.asarray(gamma)
+
+    def _apply_aggregation(self, st, spec, k_agg) -> None:
+        """Apply a resolved :class:`~repro.rounds.program.
+        AggregationSpec` — the three operator forms every scenario
+        reduces to (jit-sampled eq. (7), per-device weight matrix,
+        composed hierarchy device matrix)."""
+        if spec.kind == "static":
+            g, st.params = self._aggregate(st.params, k_agg,
+                                           full=spec.full)
+            st.global_params = g
+        elif spec.kind == "weights":
+            g, st.params = self._aggregate_dyn(
+                st.params, jnp.asarray(spec.weights, jnp.float32),
+                jnp.asarray(spec.device_up.reshape(-1)))
+            st.global_params = g
+        else:                       # "matrix": the fog hierarchy
+            if spec.global_weights is not None:
+                st.global_params = self._global_from_weights(
+                    st.params, jnp.asarray(spec.global_weights))
+            st.params = self._apply_event(
+                st.params, jnp.asarray(spec.device_matrix))
 
     def _dispersion(self, params):
         """A^(t) sample: sum_c varrho_c ||wbar_c - wbar||^2."""
@@ -325,137 +378,72 @@ class TTHFTrainer:
             total += jnp.sum(self.varrho * cns.consensus_error(z))
         return total
 
+    def _local_span(self, st, t_from: int, t_to: int) -> tuple[Any, int]:
+        """Run the pure local-SGD iterations t_from..t_to (inclusive)
+        as one scanned dispatch; mutates st.params/st.key and returns
+        (the boundary iteration's k_agg, device-steps taken). Under
+        dynamics each iteration's snapshot supplies its device-up mask
+        — dropped devices hold their parameters, exactly as the
+        per-iteration loop did."""
+        etas = jnp.stack([self.eta(u - 1)
+                          for u in range(t_from, t_to + 1)])
+        if self.tvnet is None:
+            st.params, st.key, k_agg = self._scan_local(
+                st.params, st.key, etas)
+            return k_agg, self.data.num_devices * (t_to - t_from + 1)
+        masks, live = [], 0
+        for u in range(t_from, t_to + 1):
+            snap = self.tvnet.snapshot(u)
+            masks.append(snap.device_up.reshape(-1))
+            live += int(snap.device_up.sum())
+        st.params, st.key, k_agg = self._scan_local_dyn(
+            st.params, st.key, etas, jnp.asarray(np.stack(masks)))
+        return k_agg, live
+
     # ------------------------------------------------------------------
     def run(self, steps: int, seed: int = 0, eval_every: int = 5,
             state: TTHFState | None = None,
             record_dispersion: bool = True) -> tuple[TTHFState, History]:
-        """Drive Algorithm 1. With a non-static ``dynamics`` config the
-        netsim path runs instead; a static/absent config takes the
-        historical code path (bit-for-bit identical trajectories).
-        A non-flat ``hierarchy`` config routes to the multi-stage fog
-        loop (a flat one is plain TT-HF and stays on this path)."""
-        if self.tree is not None:
-            return self._run_hierarchical(steps, seed, eval_every, state,
-                                          record_dispersion)
-        if self.tvnet is not None:
-            return self._run_dynamic(steps, seed, eval_every, state,
-                                     record_dispersion)
-        st = state or self.init(seed)
-        hist = History()
-        algo = self.algo
+        """Drive Algorithm 1 — ONE loop for every scenario.
 
-        for t in range(st.t + 1, st.t + steps + 1):
-            eta_t = self.eta(t - 1)
-            st.key, k_step, k_agg = jax.random.split(st.key, 3)
-            st.params = self._local_step(st.params, k_step, eta_t)
-            self.ledger.record_local_step(self.data.num_devices)
-
-            gamma_used = np.zeros((self.net.num_clusters,), np.int32)
-            if algo.is_consensus_step(t):
-                gamma_used = self._consensus_event_static(st, eta_t)
-
-            if algo.is_aggregation_step(t):
-                full = algo.full_participation or algo.mode != "tthf"
-                g, st.params = self._aggregate(st.params, k_agg, full=full)
-                st.global_params = g
-                n_up = (self.data.num_devices if full
-                        else self.net.num_clusters * algo.sample_per_cluster)
-                self.ledger.record_aggregation(n_up)
-
-            if t % eval_every == 0 or t == st.t + steps:
-                loss, acc = self._eval(st.global_params)
-                hist.ts.append(t)
-                hist.global_loss.append(float(loss))
-                hist.global_acc.append(float(acc))
-                if record_dispersion:
-                    hist.dispersion.append(float(self._dispersion(st.params)))
-                    hist.consensus_err.append(
-                        float(self._consensus_error(st.params)))
-                hist.gamma_used.append(gamma_used.copy())
-                hist.uplinks.append(self.ledger.uplinks)
-                hist.d2d_msgs.append(self.ledger.d2d_msgs)
-                hist.active_devices.append(self.data.num_devices)
-
-        st.t += steps
-        return st, hist
-
-    # ------------------------------------------------------------------
-    def _run_dynamic(self, steps: int, seed: int = 0, eval_every: int = 5,
-                     state: TTHFState | None = None,
-                     record_dispersion: bool = True
-                     ) -> tuple[TTHFState, History]:
-        """Algorithm 1 under time-varying network dynamics.
-
-        Per iteration the :class:`~repro.netsim.dynamics.
-        TimeVaryingNetwork` snapshot supplies the active topology:
-        dropped devices freeze (no SGD, no mixing, no uplink, no
-        broadcast), consensus mixes over the event's rebuilt ``V`` with
-        Remark-1 gammas driven by the event's component-wise lambdas
-        and the ACTIVE-device divergence, sampling draws only among
-        available devices with dark clusters renormalized away, and
-        stragglers stretch the ledger's delay. The JAX PRNG *key
-        schedule* is split exactly as in the static path, but sampling
-        draws go through a host-side generator seeded from the key, so
-        trajectories differ from the static path even under an all-up
-        event stream — bit-for-bit static reproduction comes from
-        ``run()`` routing static configs to the static path, not from
-        this loop.
+        The :class:`~repro.rounds.resolver.RoundResolver` owns the
+        composition (static topology x optional netsim dynamics x
+        optional fog hierarchy): per boundary iteration it emits the
+        consensus spec, the aggregation operator, and the round's bill;
+        this loop scans the local-SGD iterations up to each boundary in
+        one jitted dispatch and applies the events. Offline devices
+        freeze (no SGD, no mixing, no uplink, no broadcast); the served
+        ``global_params`` updates when the (root) aggregation fires;
+        the JAX key schedule and the host-side RNG seeding are exactly
+        the historical ones, so static/dynamic/hierarchical
+        trajectories are bit-for-bit those of the pre-engine loops.
         """
-        from repro.netsim import faults
-
+        assert eval_every >= 1, "eval_every must be a positive period"
         st = state or self.init(seed)
         hist = History()
-        algo = self.algo
-        N, s = self.net.num_clusters, self.net.cluster_size
-        k = algo.sample_per_cluster
+        res = self._resolver
+        N = self.net.num_clusters
+        t_last = st.t + steps
+        t = st.t + 1
+        while t <= t_last:
+            b = (res.span_end(t, t_last, eval_every) if self.chunked
+                 else t)
+            k_agg, live = self._local_span(st, t, b)
+            self.ledger.record_local_step(live)
 
-        for t in range(st.t + 1, st.t + steps + 1):
-            eta_t = self.eta(t - 1)
-            st.key, k_step, k_agg = jax.random.split(st.key, 3)
-            snap = self.tvnet.snapshot(t)
-            up = jnp.asarray(snap.device_up)
-            up_flat = up.reshape(-1)
-            st.params = self._local_step_dyn(st.params, k_step, eta_t,
-                                             up_flat)
-            self.ledger.record_local_step(int(snap.device_up.sum()))
-
+            eta_b = self.eta(b - 1)
+            ev = res.resolve(b, k_agg)
             gamma_used = np.zeros((N,), np.int32)
-            if algo.is_consensus_step(t):
-                gamma_used = self._consensus_event_dynamic(st, snap,
-                                                           eta_t, up)
+            if ev.consensus is not None:
+                gamma_used = self._consensus_event(st, ev.consensus,
+                                                   eta_b)
+            if ev.aggregation is not None:
+                self._apply_aggregation(st, ev.aggregation, k_agg)
+            ev.billing.charge(self.ledger, gamma_used)
 
-            if algo.is_aggregation_step(t):
-                full = algo.full_participation or algo.mode != "tthf"
-                if full:
-                    weights = faults.full_participation_weights(
-                        snap.device_up, np.asarray(self.net.varrho))
-                    n_up = int(snap.device_up.sum())
-                    mults = snap.delay_mult[snap.device_up]
-                else:
-                    # availability-aware cluster sampling: the jax key
-                    # seeds a host-side draw among available devices
-                    rng = np.random.default_rng(
-                        int(jax.random.randint(k_agg, (), 0, 2**31 - 1)))
-                    picks, counts = faults.availability_sample(
-                        rng, snap.device_up, k=k)
-                    weights = faults.aggregation_weights(
-                        picks, counts, snap.varrho, s)
-                    n_up = int(counts.sum())
-                    mults = faults.uplink_tail_mults(
-                        snap.delay_mult, picks, counts)
-                if n_up > 0:
-                    g, st.params = self._aggregate_dyn(
-                        st.params, jnp.asarray(weights, jnp.float32),
-                        up_flat)
-                    st.global_params = g
-                    self.ledger.record_aggregation(
-                        n_up, uplink_delay_mults=mults)
-                # an all-dark fleet skips the aggregation entirely: no
-                # uplinks, no broadcast, the global model stays put
-
-            if t % eval_every == 0 or t == st.t + steps:
+            if b % eval_every == 0 or b == t_last:
                 loss, acc = self._eval(st.global_params)
-                hist.ts.append(t)
+                hist.ts.append(b)
                 hist.global_loss.append(float(loss))
                 hist.global_acc.append(float(acc))
                 if record_dispersion:
@@ -465,99 +453,8 @@ class TTHFTrainer:
                 hist.gamma_used.append(gamma_used.copy())
                 hist.uplinks.append(self.ledger.uplinks)
                 hist.d2d_msgs.append(self.ledger.d2d_msgs)
-                hist.active_devices.append(int(snap.device_up.sum()))
-
-        st.t += steps
-        return st, hist
-
-    # ------------------------------------------------------------------
-    def _run_hierarchical(self, steps: int, seed: int = 0,
-                          eval_every: int = 5,
-                          state: TTHFState | None = None,
-                          record_dispersion: bool = True
-                          ) -> tuple[TTHFState, History]:
-        """Algorithm 1 generalized to the multi-stage fog hierarchy
-        (DESIGN.md §9).
-
-        Local SGD and D2D consensus run exactly as in the static (or,
-        with a non-static ``dynamics``, the netsim) loop. At every
-        tier-1 step (``hierarchy.taus[0] == algo.tau``) the host
-        resolves a :class:`~repro.hierarchy.aggregate.HierarchyEvent`:
-        the event calendar picks the depth (nested periods — a root
-        event composes every tier below it), sampling draws only among
-        available devices/subtrees with dark subtrees renormalized
-        away, and the composed (I, I) device matrix is applied in one
-        jitted einsum — devices below a depth-d ancestor receive that
-        subtree's aggregate, offline devices hold their parameters.
-        ``global_params`` (the served model) updates only when the
-        root fires; the ledger tags every tier's uplinks by level.
-        """
-        from repro.hierarchy import build_event
-        from repro.netsim import faults
-
-        st = state or self.init(seed)
-        hist = History()
-        algo = self.algo
-        N, s = self.net.num_clusters, self.net.cluster_size
-
-        for t in range(st.t + 1, st.t + steps + 1):
-            eta_t = self.eta(t - 1)
-            st.key, k_step, k_agg = jax.random.split(st.key, 3)
-            snap = (self.tvnet.snapshot(t)
-                    if self.tvnet is not None else None)
-            if snap is None:
-                st.params = self._local_step(st.params, k_step, eta_t)
-                self.ledger.record_local_step(self.data.num_devices)
-            else:
-                up = jnp.asarray(snap.device_up)
-                st.params = self._local_step_dyn(st.params, k_step, eta_t,
-                                                 up.reshape(-1))
-                self.ledger.record_local_step(int(snap.device_up.sum()))
-
-            gamma_used = np.zeros((N,), np.int32)
-            if algo.is_consensus_step(t):
-                if snap is None:
-                    gamma_used = self._consensus_event_static(st, eta_t)
-                else:
-                    gamma_used = self._consensus_event_dynamic(
-                        st, snap, eta_t, up)
-
-            if algo.is_aggregation_step(t):
-                rng = np.random.default_rng(
-                    int(jax.random.randint(k_agg, (), 0, 2**31 - 1)))
-                device_up = (snap.device_up if snap is not None
-                             else np.ones((N, s), bool))
-                ev = build_event(rng, self.tree, self.hierarchy, t,
-                                 device_up, receive_offline=False)
-                if ev is not None and ev.total_uplinks > 0:
-                    if ev.global_weights is not None:
-                        st.global_params = self._global_from_weights(
-                            st.params, jnp.asarray(ev.global_weights))
-                    st.params = self._apply_event(
-                        st.params, jnp.asarray(ev.device_matrix))
-                    self.ledger.record_hierarchy_event(
-                        ev.uplinks_by_level,
-                        uplink_delay_mults=(faults.uplink_tail_mults(
-                            snap.delay_mult, ev.picks, ev.counts)
-                            if snap is not None else None))
-                # an all-dark fleet skips the event: no uplinks, no
-                # broadcast, every model (and the global one) stays put
-
-            if t % eval_every == 0 or t == st.t + steps:
-                loss, acc = self._eval(st.global_params)
-                hist.ts.append(t)
-                hist.global_loss.append(float(loss))
-                hist.global_acc.append(float(acc))
-                if record_dispersion:
-                    hist.dispersion.append(float(self._dispersion(st.params)))
-                    hist.consensus_err.append(
-                        float(self._consensus_error(st.params)))
-                hist.gamma_used.append(gamma_used.copy())
-                hist.uplinks.append(self.ledger.uplinks)
-                hist.d2d_msgs.append(self.ledger.d2d_msgs)
-                hist.active_devices.append(
-                    int(snap.device_up.sum()) if snap is not None
-                    else self.data.num_devices)
+                hist.active_devices.append(ev.active_devices)
+            t = b + 1
 
         st.t += steps
         return st, hist

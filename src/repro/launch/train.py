@@ -22,6 +22,23 @@ import time
 import numpy as np
 
 
+def build_program(args, tau: int):
+    """The declarative round program (DESIGN.md §10): ONE object
+    declares the scenario — optional netsim dynamics, optional fog
+    hierarchy — and both trainers resolve it, instead of each mode
+    threading per-scenario knobs through per-scenario loops."""
+    from repro.rounds import RoundProgram
+
+    dynamics = hierarchy = None
+    if args.scenario:
+        from repro.netsim import scenarios
+        dynamics = scenarios.get(args.scenario, seed=args.seed)
+    if args.hierarchy:
+        from repro.hierarchy import presets
+        hierarchy = presets.get(args.hierarchy, tau=tau)
+    return RoundProgram(dynamics=dynamics, hierarchy=hierarchy)
+
+
 def run_sim(args):
     import jax
     from repro.configs import TopologyConfig, TTHFConfig
@@ -37,14 +54,6 @@ def run_sim(args):
                           graph="geometric", seed=args.seed)
     model = make_sim_model(args.model, data.feature_dim, data.num_classes,
                            hidden=args.hidden)
-    dynamics = None
-    if args.scenario:
-        from repro.netsim import scenarios
-        dynamics = scenarios.get(args.scenario, seed=args.seed)
-    hierarchy = None
-    if args.hierarchy:
-        from repro.hierarchy import presets
-        hierarchy = presets.get(args.hierarchy, tau=args.tau)
     if args.baseline:
         algo = make_baseline_config(args.baseline, args.tau)
         algo = dataclasses.replace(algo, constant_lr=args.lr)
@@ -53,7 +62,7 @@ def run_sim(args):
                           gamma_d2d=args.gamma, constant_lr=args.lr,
                           phi=args.phi)
     tr = TTHFTrainer(model, data, topo, algo, batch_size=args.batch,
-                     dynamics=dynamics, hierarchy=hierarchy)
+                     program=build_program(args, algo.tau))
     t0 = time.time()
     st, hist = tr.run(steps=args.steps, seed=args.seed,
                       eval_every=args.eval_every)
@@ -73,18 +82,13 @@ def run_sim(args):
 
 
 def run_scale(args):
-    import jax
-    import jax.numpy as jnp
     from repro.configs import get_arch
-    from repro.core.distributed import (
-        TTHFScaleConfig, make_tthf_train_step, stack_replicas)
-    from repro.data.tokens import synthetic_token_batches
-    from repro.models import build_model
+    from repro.core.distributed import TTHFScaleConfig
+    from repro.train import ScaleTrainer, TrainerConfig
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    model = build_model(cfg)
 
     # consensus_every must divide tau (static event calendar): snap to
     # the nearest divisor <= requested
@@ -97,81 +101,22 @@ def run_scale(args):
                             consensus_every=ce,
                             gamma_d2d=args.gamma, lr=args.lr,
                             consensus_mode=args.consensus_mode)
-    if args.hierarchy:
-        # the fog hierarchy lives in the ScaleTrainer interval loop
-        from repro.hierarchy import presets
-        from repro.netsim import scenarios
-        from repro.train import ScaleTrainer, TrainerConfig
-        tr = ScaleTrainer(
-            cfg, scale,
-            TrainerConfig(batch_per_replica=args.batch, seq_len=args.seq,
-                          intervals=args.steps, eval_every=0,
-                          seed=args.seed),
-            sync=args.sync,
-            dynamics=(scenarios.get(args.scenario, seed=args.seed)
-                      if args.scenario else None),
-            hierarchy=presets.get(args.hierarchy, tau=args.tau))
-        tr.init().run()
-        by_level = "".join(f" L{l}={n}" for l, n in
-                           sorted(tr.ledger.uplinks_by_level.items()))
-        print(f"intervals={tr.interval} uplinks={tr.ledger.uplinks}"
-              f"{by_level} d2d_msgs={tr.ledger.d2d_msgs}")
-        return 0
-    refreshable = bool(args.scenario) and args.sync == "tthf"
-    step, net = make_tthf_train_step(model, scale, dtype=jnp.float32,
-                                     sync=args.sync,
-                                     refreshable=refreshable)
-    step = jax.jit(step)
-    tvnet = plan = None
-    if refreshable:
-        from repro.core.mixing import build_mixing_plan, refresh_matrices
-        from repro.netsim import scenarios
-        from repro.netsim.dynamics import TimeVaryingNetwork
-        tvnet = TimeVaryingNetwork(net, scenarios.get(args.scenario,
-                                                      seed=args.seed))
-        plan = build_mixing_plan(net, scale.gamma_d2d,
-                                 backend=scale.consensus_mode)
-
-    params = model.init(jax.random.PRNGKey(args.seed))
-    params = stack_replicas(params, scale.replicas)
-    gens = [synthetic_token_batches(args.batch, args.seq, cfg.vocab_size,
-                                    seed=args.seed, shard_id=r)
-            for r in range(scale.replicas)]
-    key = jax.random.PRNGKey(args.seed + 1)
-
-    for outer in range(args.steps):
-        mbs = [[next(g) for _ in range(scale.tau)] for g in gens]
-        batch = {
-            kk: jnp.asarray(np.stack(
-                [[mbs[r][t][kk] for r in range(scale.replicas)]
-                 for t in range(scale.tau)]))
-            for kk in ("tokens", "labels")
-        }
-        key, kp = jax.random.split(key)
-        t0 = time.time()
-        if tvnet is not None:
-            # same semantics as ScaleTrainer._dynamic_interval: the
-            # full (N, s) availability-aware weight matrix — every
-            # sampled replica enters the aggregate, dark clusters
-            # carry weight 0
-            from repro.netsim import faults
-            snap = tvnet.snapshot(outer + 1)
-            rng = np.random.default_rng(
-                int(jax.random.randint(kp, (), 0, 2**31 - 1)))
-            picks_np, counts = faults.availability_sample(
-                rng, snap.device_up, k=scale.sample_per_cluster)
-            agg_w = jnp.asarray(faults.aggregation_weights(
-                picks_np, counts, snap.varrho, scale.cluster_size),
-                jnp.float32)
-            params, loss = step(params, batch, agg_w, jnp.asarray(outer),
-                                refresh_matrices(plan, snap.V))
-        else:
-            picks = jax.random.randint(kp, (net.num_clusters,), 0,
-                                       net.cluster_size)
-            params, loss = step(params, batch, picks, jnp.asarray(outer))
-        print(f"interval {outer}: loss={float(loss):.4f} "
-              f"({time.time()-t0:.1f}s, tau={scale.tau} local steps, "
-              f"sync={args.sync})")
+    # every scenario — flat, dynamic, hierarchical — is the same
+    # ScaleTrainer loop over a resolved round program
+    tr = ScaleTrainer(
+        cfg, scale,
+        TrainerConfig(batch_per_replica=args.batch, seq_len=args.seq,
+                      intervals=args.steps, eval_every=0,
+                      seed=args.seed),
+        sync=args.sync, program=build_program(args, args.tau))
+    t0 = time.time()
+    tr.init().run()
+    by_level = "".join(f" L{l}={n}" for l, n in
+                       sorted(tr.ledger.uplinks_by_level.items()))
+    print(f"intervals={tr.interval} wall={time.time() - t0:.1f}s "
+          f"uplinks={tr.ledger.uplinks}{by_level} "
+          f"d2d_msgs={tr.ledger.d2d_msgs} (tau={scale.tau} local steps "
+          f"per interval, sync={args.sync})")
     return 0
 
 

@@ -1,0 +1,20 @@
+"""repro.rounds — the declarative round-program engine (DESIGN.md §10).
+
+One schedule drives every execution scenario: a frozen
+:class:`RoundProgram` declares the scenario (optional netsim dynamics,
+optional fog hierarchy), a :class:`RoundResolver` compiles it against a
+concrete network into per-round events (device-up mask, consensus spec,
+aggregation operator, one :class:`Billing` record), and both trainers
+run ONE loop over those events — with the τ local-SGD iterations
+between events chunked through a single jitted ``lax.scan`` in
+simulation mode.
+"""
+from repro.rounds.program import (
+    AggregationSpec, Billing, ConsensusSpec, RoundEvent, RoundProgram,
+    ScaleRoundEvent)
+from repro.rounds.resolver import RoundResolver, host_rng
+
+__all__ = [
+    "AggregationSpec", "Billing", "ConsensusSpec", "RoundEvent",
+    "RoundProgram", "RoundResolver", "ScaleRoundEvent", "host_rng",
+]

@@ -1,0 +1,321 @@
+"""The round-program resolver (DESIGN.md §10).
+
+:class:`RoundResolver` compiles a declarative
+:class:`~repro.rounds.program.RoundProgram` against a concrete
+:class:`~repro.core.topology.Network` into per-round events: it
+composes the static topology, an optional
+:class:`~repro.netsim.dynamics.TimeVaryingNetwork`, and an optional
+:class:`~repro.hierarchy.tree.AggregationTree`, and per iteration (sim
+mode) or per interval (scale mode) emits who is up, which consensus
+matrices mix, which aggregation operator fires, and one
+:class:`~repro.rounds.program.Billing` record.
+
+The resolver also knows the event *calendar* ahead of time
+(:meth:`span_end`), which is what lets the simulation trainer chunk
+the τ local-SGD iterations between events through one jitted
+``lax.scan`` instead of dispatching per iteration.
+
+Everything here is host-side numpy (plus the deterministic
+``k_agg``-seeded generators the pre-engine loops used); the jitted
+trainers consume the specs unchanged, so resolved trajectories are
+bit-for-bit the historical ones (asserted in ``tests/test_rounds.py``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.rounds.program import (
+    AggregationSpec, Billing, ConsensusSpec, RoundEvent, RoundProgram,
+    ScaleRoundEvent)
+
+
+def host_rng(key) -> np.random.Generator:
+    """The pre-engine loops' host-side generator: one numpy Generator
+    seeded deterministically from a JAX key (sampling among *available*
+    devices and down the fog tree is host work; the JAX key schedule
+    stays untouched)."""
+    import jax
+    return np.random.default_rng(
+        int(jax.random.randint(key, (), 0, 2**31 - 1)))
+
+
+class RoundResolver:
+    """Per-round event resolution for both execution modes.
+
+    Build with :meth:`for_sim` (a :class:`~repro.configs.base.
+    TTHFConfig` drives the calendar, Remark-1 adaptive Γ stays a
+    trainer-side computation) or :meth:`for_scale` (a
+    :class:`~repro.core.distributed.TTHFScaleConfig` plus the step's
+    :class:`~repro.core.mixing.MixingPlan` for per-interval matrix
+    refreshes).
+    """
+
+    def __init__(self, net, program: RoundProgram, *,
+                 algo=None, scale=None, plan=None,
+                 topo_weights: str = "metropolis"):
+        assert (algo is None) != (scale is None), \
+            "exactly one of algo (sim) / scale (scale mode) drives the calendar"
+        self.net = net
+        self.program = program
+        self.algo = algo
+        self.scale = scale
+        self.plan = plan
+        self.dynamics = program.dynamics
+        self.hierarchy = program.hierarchy if program.is_hierarchical else None
+        self.tvnet = None
+        if program.is_dynamic:
+            from repro.netsim.dynamics import TimeVaryingNetwork
+            self.tvnet = TimeVaryingNetwork(net, program.dynamics,
+                                            weights=topo_weights)
+        self.tree = None
+        if self.hierarchy is not None:
+            from repro.hierarchy import build_tree
+            self.tree = build_tree(self.hierarchy, net.num_clusters,
+                                   net.cluster_size)
+        self._edges = net.num_d2d_edges()
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def for_sim(cls, net, algo, program: RoundProgram,
+                topo_weights: str = "metropolis") -> "RoundResolver":
+        if program.is_hierarchical:
+            h = program.hierarchy
+            assert algo.mode == "tthf" and not algo.full_participation, \
+                "hierarchical aggregation implies sampled tthf mode"
+            assert h.taus[0] == algo.tau, \
+                f"tier-1 period {h.taus[0]} must equal tau={algo.tau}"
+            assert h.sample[0] == algo.sample_per_cluster, \
+                "tier-1 fan-in must equal sample_per_cluster"
+        return cls(net, program, algo=algo, topo_weights=topo_weights)
+
+    @classmethod
+    def for_scale(cls, net, scale, program: RoundProgram,
+                  plan=None) -> "RoundResolver":
+        # tau / fan-in cross-validation already ran in
+        # make_tthf_train_step (the step and the resolver must agree)
+        return cls(net, program, scale=scale, plan=plan)
+
+    # ------------------------------------------------------------------
+    # the simulation calendar: event boundaries are known ahead of time
+    # ------------------------------------------------------------------
+
+    def is_event(self, t: int, eval_every: int) -> bool:
+        """Does iteration t carry a consensus, aggregation or eval?"""
+        return (self.algo.is_consensus_step(t)
+                or self.algo.is_aggregation_step(t)
+                or (eval_every > 0 and t % eval_every == 0))
+
+    def span_end(self, t: int, t_last: int, eval_every: int) -> int:
+        """The first boundary iteration in [t, t_last]: the next
+        consensus/aggregation/eval event, or t_last itself. Every
+        iteration strictly before it is pure local SGD — the scanned
+        span of the sim hot loop."""
+        u = t
+        while u < t_last and not self.is_event(u, eval_every):
+            u += 1
+        return u
+
+    # ------------------------------------------------------------------
+    # simulation mode: one event per boundary iteration
+    # ------------------------------------------------------------------
+
+    def resolve(self, t: int, k_agg) -> RoundEvent:
+        """Resolve iteration ``t``'s events. ``k_agg`` is the round's
+        aggregation key from the trainer's (unchanged) key schedule —
+        static sampling consumes it inside the jitted aggregate, the
+        dynamic/hierarchical paths seed their host generators from it.
+        """
+        algo = self.algo
+        net = self.net
+        snap = self.tvnet.snapshot(t) if self.tvnet is not None else None
+        device_up = snap.device_up if snap is not None else None
+        active = (int(snap.device_up.sum()) if snap is not None
+                  else net.num_devices)
+        billing = Billing()
+
+        consensus = None
+        if algo.is_consensus_step(t):
+            consensus = self._consensus_spec(snap)
+            billing.consensus_edges = consensus.edges
+            if snap is not None:
+                from repro.netsim import faults
+                billing.consensus_tail = faults.consensus_tail_mult(
+                    snap.delay_mult, snap.device_up, snap.adj)
+
+        aggregation = None
+        if algo.is_aggregation_step(t):
+            aggregation = self._sim_aggregation(t, k_agg, snap, billing)
+
+        return RoundEvent(t=t, active_devices=active, device_up=device_up,
+                          consensus=consensus, aggregation=aggregation,
+                          billing=billing)
+
+    def _consensus_spec(self, snap) -> ConsensusSpec:
+        if snap is None:
+            return ConsensusSpec(edges=self._edges)
+        return ConsensusSpec(edges=snap.num_active_edges(), V=snap.V,
+                             lambdas=snap.lambdas,
+                             active_sizes=snap.active_per_cluster,
+                             device_up=snap.device_up)
+
+    def _sim_aggregation(self, t, k_agg, snap,
+                         billing: Billing) -> Optional[AggregationSpec]:
+        from repro.netsim import faults
+
+        algo = self.algo
+        net = self.net
+        N, s = net.num_clusters, net.cluster_size
+
+        if self.tree is not None:
+            from repro.hierarchy import build_event
+            rng = host_rng(k_agg)
+            up = (snap.device_up if snap is not None
+                  else np.ones((N, s), bool))
+            ev = build_event(rng, self.tree, self.hierarchy, t, up,
+                             receive_offline=False)
+            if ev is None or ev.total_uplinks == 0:
+                # an all-dark fleet skips the event: no uplinks, no
+                # broadcast, every model (and the global one) stays put
+                return None
+            billing.uplinks_by_level = dict(ev.uplinks_by_level)
+            if snap is not None:
+                billing.uplink_delay_mults = faults.uplink_tail_mults(
+                    snap.delay_mult, ev.picks, ev.counts)
+            return AggregationSpec(kind="matrix",
+                                   device_matrix=ev.device_matrix,
+                                   global_weights=ev.global_weights)
+
+        full = algo.full_participation or algo.mode != "tthf"
+        if snap is None:
+            n_up = (net.num_devices if full
+                    else N * algo.sample_per_cluster)
+            billing.uplinks_by_level = {1: n_up}
+            return AggregationSpec(kind="static", full=full)
+
+        if full:
+            weights = faults.full_participation_weights(
+                snap.device_up, np.asarray(net.varrho))
+            n_up = int(snap.device_up.sum())
+            mults = snap.delay_mult[snap.device_up]
+        else:
+            # availability-aware cluster sampling: the jax key seeds a
+            # host-side draw among available devices
+            rng = host_rng(k_agg)
+            picks, counts = faults.availability_sample(
+                rng, snap.device_up, k=algo.sample_per_cluster)
+            weights = faults.aggregation_weights(
+                picks, counts, snap.varrho, s)
+            n_up = int(counts.sum())
+            mults = faults.uplink_tail_mults(
+                snap.delay_mult, picks, counts)
+        if n_up == 0:
+            return None
+        billing.uplinks_by_level = {1: n_up}
+        billing.uplink_delay_mults = mults
+        return AggregationSpec(kind="weights", weights=weights,
+                               device_up=snap.device_up)
+
+    # ------------------------------------------------------------------
+    # scale mode: one event per aggregation interval
+    # ------------------------------------------------------------------
+
+    def resolve_interval(self, interval: int, kp) -> ScaleRoundEvent:
+        """Resolve interval ``interval`` (0-based): the step's
+        aggregation argument, the optional consensus-matrix refresh,
+        and the interval's full bill (local steps × τ, the interval's
+        ``τ // consensus_every`` consensus events, the uplinks)."""
+        import jax.numpy as jnp
+
+        from repro.core import sampling as smp
+        from repro.netsim import faults
+
+        scale = self.scale
+        net = self.net
+        N, s = scale.num_clusters, scale.cluster_size
+        tau, k = scale.tau, scale.sample_per_cluster
+        events = (tau // scale.consensus_every
+                  if scale.consensus_every else 0)
+        snap = (self.tvnet.snapshot(interval + 1)
+                if self.tvnet is not None else None)
+        refresh = None
+        if snap is not None and self.plan is not None:
+            from repro.core.mixing import refresh_matrices
+            refresh = refresh_matrices(self.plan, snap.V)
+
+        root_served = False
+        mults = None
+        up_level: Optional[dict] = None
+        if self.tree is not None:
+            from repro.hierarchy import build_event
+            rng = host_rng(kp)
+            up = (snap.device_up if snap is not None
+                  else np.ones((N, s), bool))
+            # tier-1 period == tau, so every interval fires depth >= 1;
+            # scale mode broadcasts into live subtrees regardless of
+            # churn (replicas are physical shards)
+            ev = build_event(rng, self.tree, self.hierarchy,
+                             (interval + 1) * tau, up,
+                             receive_offline=True)
+            agg = jnp.asarray(ev.device_matrix)
+            root_served = (ev.global_weights is not None
+                           and bool(ev.total_uplinks))
+            if ev.total_uplinks:
+                up_level = dict(ev.uplinks_by_level)
+                if snap is not None:
+                    mults = faults.uplink_tail_mults(
+                        snap.delay_mult, ev.picks, ev.counts)
+        elif snap is not None:
+            rng = host_rng(kp)
+            picks_np, counts = faults.availability_sample(
+                rng, snap.device_up, k=k)
+            if refresh is not None:
+                # the refreshable step aggregates with the full (N, s)
+                # weight matrix, so EVERY sampled replica the ledger
+                # bills actually enters the aggregate
+                agg = jnp.asarray(faults.aggregation_weights(
+                    picks_np, counts, snap.varrho, s), jnp.float32)
+            else:
+                # star/local sync: the picks argument is unused inside
+                agg = jnp.asarray(
+                    np.where(counts > 0, picks_np[:, 0], 0), jnp.int32)
+            up_level = {1: int(counts.sum())}
+            mults = faults.uplink_tail_mults(
+                snap.delay_mult, picks_np, counts)
+        elif k > 1:
+            # static multi-sampling through the same (N, s) weight form
+            # as the dynamic path: all k picks enter the aggregate and
+            # the ledger bills the N * k uplinks actually transmitted
+            picks_np = np.asarray(smp.sample_devices_multi(kp, N, s, k))
+            counts = np.full((N,), k, np.int64)
+            agg = jnp.asarray(faults.aggregation_weights(
+                picks_np, counts, np.asarray(net.varrho), s), jnp.float32)
+            up_level = {1: N * k}
+        else:
+            agg = smp.sample_devices(kp, N, s)   # the historical draw
+            up_level = {1: N}
+
+        if snap is not None:
+            gammas = np.where(snap.num_active_edges() > 0,
+                              scale.gamma_d2d, 0)
+            edges = snap.num_active_edges()
+            tail = faults.consensus_tail_mult(
+                snap.delay_mult, snap.device_up, snap.adj)
+            local = int(snap.device_up.sum()) * tau
+        else:
+            gammas = np.full((N,), scale.gamma_d2d)
+            edges = self._edges
+            tail = None
+            local = scale.replicas * tau
+
+        billing = Billing(local_devices=local, consensus_gammas=gammas,
+                          consensus_edges=edges, consensus_tail=tail,
+                          consensus_repeats=events,
+                          uplinks_by_level=up_level,
+                          uplink_delay_mults=mults)
+        return ScaleRoundEvent(interval=interval, agg=agg, refresh=refresh,
+                               root_served=root_served, billing=billing)
+
+
+__all__ = ["RoundResolver", "host_rng"]

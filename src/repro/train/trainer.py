@@ -4,8 +4,13 @@ checkpointing, and metric logging — the production loop around
 
 Handles: data sharding per replica, interval batching
 (tau x R x b x T), periodic held-out eval of the *global* (sampled)
-model, checkpoint save/resume, and the communication ledger (uplink /
-consensus event accounting mirroring the paper's cost model).
+model, checkpoint save/resume, and the communication ledger. Every
+scenario — static, netsim dynamics, fog hierarchy, compositions —
+runs through ONE ``_interval``: the
+:class:`~repro.rounds.resolver.RoundResolver` turns the declarative
+:class:`~repro.rounds.program.RoundProgram` into the step's
+aggregation argument, the optional consensus-matrix refresh, and one
+:class:`~repro.rounds.program.Billing` record (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -23,9 +28,10 @@ from repro.configs.base import DynamicsConfig, HierarchyConfig, ModelConfig
 from repro.core.distributed import (
     TTHFScaleConfig, make_tthf_train_step, stack_replicas)
 from repro.core.energy import CommLedger
-from repro.core.mixing import build_mixing_plan, refresh_matrices
+from repro.core.mixing import build_mixing_plan
 from repro.data.tokens import synthetic_token_batches
 from repro.models import ModelApi, build_model
+from repro.rounds import RoundProgram, RoundResolver
 from repro.train.metrics import MetricLogger
 
 # the only dtypes the microstep math supports; anything else (a typo'd
@@ -57,39 +63,42 @@ class ScaleTrainer:
     def __init__(self, cfg: ModelConfig, scale: TTHFScaleConfig,
                  tcfg: TrainerConfig, sync: str = "tthf",
                  dynamics: Optional[DynamicsConfig] = None,
-                 hierarchy: Optional[HierarchyConfig] = None):
+                 hierarchy: Optional[HierarchyConfig] = None,
+                 program: Optional[RoundProgram] = None):
         self.cfg = cfg
         self.scale = scale
         self.tcfg = tcfg
         self.model: ModelApi = build_model(cfg)
         dtype = _DTYPES[tcfg.dtype]
-        # multi-stage fog hierarchy: a flat (L = 2) config IS TT-HF and
-        # takes the historical code path bit-for-bit
-        self.hierarchy = None
-        self.tree = None
-        if hierarchy is not None and not hierarchy.is_flat:
-            from repro.hierarchy import build_tree
+        # the declarative round program (DESIGN.md §10): a static (or
+        # absent) dynamics config and a flat (L = 2) hierarchy resolve
+        # to the exact historical code path bit-for-bit; the
+        # ``dynamics``/``hierarchy`` kwargs are sugar for a program
+        if program is None:
+            program = RoundProgram(dynamics=dynamics, hierarchy=hierarchy)
+        else:
+            assert dynamics is None and hierarchy is None, \
+                "pass either program= or the dynamics=/hierarchy= sugar " \
+                "kwargs, not both (the kwargs would be silently ignored)"
+        self.program = program
+        if program.is_hierarchical:
             assert sync == "tthf", "hierarchy implies tthf sync"
-            self.hierarchy = hierarchy
-            self.tree = build_tree(hierarchy, scale.num_clusters,
-                                   scale.cluster_size)
-        # netsim dynamics: the event stream ticks once per aggregation
-        # interval; each interval's consensus matrices are refreshed on
-        # the active subgraph and fed to the (once-traced) step
-        self.tvnet = None
-        self._plan = None
-        dynamic = dynamics is not None and not dynamics.is_static
-        # only a tthf step carries consensus matrices to refresh
-        refreshable = dynamic and sync == "tthf"
+        # only a tthf step carries consensus matrices to refresh; the
+        # event stream ticks once per aggregation interval and each
+        # interval's matrices are fed to the (once-traced) step
+        refreshable = program.is_dynamic and sync == "tthf"
         step, self.net = make_tthf_train_step(
             self.model, scale, dtype=dtype, sync=sync,
-            refreshable=refreshable, hierarchy=hierarchy)
-        if dynamic:
-            from repro.netsim.dynamics import TimeVaryingNetwork
-            self.tvnet = TimeVaryingNetwork(self.net, dynamics)
+            refreshable=refreshable, hierarchy=program.hierarchy)
+        self._plan = None
         if refreshable:
             self._plan = build_mixing_plan(
                 self.net, scale.gamma_d2d, backend=scale.consensus_mode)
+        self._resolver = RoundResolver.for_scale(self.net, scale, program,
+                                                 plan=self._plan)
+        self.hierarchy = self._resolver.hierarchy
+        self.tree = self._resolver.tree
+        self.tvnet = self._resolver.tvnet
         self._step = jax.jit(step)
         self._eval_loss = jax.jit(
             lambda p, b: self.model.loss(p, b, dtype=dtype, remat=False))
@@ -109,15 +118,18 @@ class ScaleTrainer:
         self._global = None
         self.interval = 0
 
-    def _make_gens(self):
+    def _make_gens(self, train_start: int = 0, eval_start: int = 0):
+        """(Re)build the token streams, optionally already seeked past
+        the first ``train_start``/``eval_start`` draws — restore uses
+        this for O(1) resume instead of replaying consumed batches."""
         tcfg, cfg = self.tcfg, self.cfg
         self._gens = [synthetic_token_batches(
             tcfg.batch_per_replica, tcfg.seq_len, cfg.vocab_size,
-            seed=tcfg.seed, shard_id=r)
+            seed=tcfg.seed, shard_id=r, start=train_start)
             for r in range(self.scale.replicas)]
         self._eval_gen = synthetic_token_batches(
             tcfg.batch_per_replica, tcfg.seq_len, cfg.vocab_size,
-            seed=tcfg.seed + 10_000, shard_id=99)
+            seed=tcfg.seed + 10_000, shard_id=99, start=eval_start)
 
     # ------------------------------------------------------------------
     def init(self):
@@ -154,106 +166,24 @@ class ScaleTrainer:
                 g, {k: jnp.asarray(v) for k, v in b.items()})))
         return float(np.mean(losses))
 
-    def _dynamic_interval(self, batch, kp, events: int):
-        """One interval under netsim dynamics: per-aggregation-round W
-        refresh on the active subgraph, availability-aware sampling as
-        one (N, s) weight matrix, and straggler-aware ledger records."""
-        from repro.netsim import faults
-
-        snap = self.tvnet.snapshot(self.interval + 1)
-        refresh = (refresh_matrices(self._plan, snap.V)
-                   if self._plan is not None else None)
-        rng = np.random.default_rng(
-            int(jax.random.randint(kp, (), 0, 2**31 - 1)))
-        picks_np, counts = faults.availability_sample(
-            rng, snap.device_up, k=self.scale.sample_per_cluster)
-        if refresh is not None:
-            # the refreshable step aggregates with the full (N, s)
-            # weight matrix, so EVERY sampled replica the ledger bills
-            # actually enters the aggregate (sample_per_cluster > 1)
-            # and a dark cluster's devices carry exact weight 0
-            agg_w = jnp.asarray(faults.aggregation_weights(
-                picks_np, counts, snap.varrho, self.scale.cluster_size),
-                jnp.float32)
-            self.params, loss = self._step(
-                self.params, batch, agg_w, jnp.asarray(self.interval),
-                refresh)
-        else:
-            # star/local sync: the picks argument is unused inside
-            picks = jnp.asarray(np.where(counts > 0, picks_np[:, 0], 0),
-                                jnp.int32)
-            self.params, loss = self._step(
-                self.params, batch, picks, jnp.asarray(self.interval))
-        self.ledger.record_aggregation(
-            int(counts.sum()),
-            uplink_delay_mults=faults.uplink_tail_mults(
-                snap.delay_mult, picks_np, counts))
-        self._record_interval_comms(snap, events)
-        return loss
-
-    def _hierarchical_interval(self, batch, kp, events: int):
-        """One interval of the multi-stage fog hierarchy: the host
-        resolves the event's per-level weight matrices and feeds their
-        composed (R, R) device matrix to the once-compiled step."""
-        from repro.hierarchy import build_event
-        from repro.netsim import faults
-
-        snap = None
-        refresh = None
-        if self.tvnet is not None:
-            snap = self.tvnet.snapshot(self.interval + 1)
-            refresh = (refresh_matrices(self._plan, snap.V)
-                       if self._plan is not None else None)
-            device_up = snap.device_up
-        else:
-            device_up = np.ones((self.scale.num_clusters,
-                                 self.scale.cluster_size), bool)
-        rng = np.random.default_rng(
-            int(jax.random.randint(kp, (), 0, 2**31 - 1)))
-        # tier-1 period == tau, so every interval fires depth >= 1
-        ev = build_event(rng, self.tree, self.hierarchy,
-                         (self.interval + 1) * self.scale.tau, device_up,
-                         receive_offline=True)
-        agg_m = jnp.asarray(ev.device_matrix)
-        args = (self.params, batch, agg_m, jnp.asarray(self.interval))
-        if refresh is not None:
-            self.params, loss = self._step(*args, refresh)
+    def _interval(self, batch, kp):
+        """ONE interval for every scenario: the resolver supplies the
+        step's aggregation argument (picks / (N, s) weight matrix /
+        composed (R, R) device matrix — whichever form the step was
+        built for), the optional per-aggregation-round consensus-matrix
+        refresh, and the interval's full bill."""
+        ev = self._resolver.resolve_interval(self.interval, kp)
+        args = (self.params, batch, ev.agg, jnp.asarray(self.interval))
+        if ev.refresh is not None:
+            self.params, loss = self._step(*args, ev.refresh)
         else:
             self.params, loss = self._step(*args)
-        if ev.global_weights is not None and ev.total_uplinks:
+        if ev.root_served:
             # a live root event just broadcast the root model to every
             # replica — snapshot it as the served global model
             self._global = jax.tree.map(lambda l: l[0], self.params)
-        if ev.total_uplinks:
-            self.ledger.record_hierarchy_event(
-                ev.uplinks_by_level,
-                uplink_delay_mults=(faults.uplink_tail_mults(
-                    snap.delay_mult, ev.picks, ev.counts)
-                    if snap is not None else None))
-        if snap is not None:
-            self._record_interval_comms(snap, events)
-        else:
-            self.ledger.record_consensus(
-                [self.scale.gamma_d2d] * self.net.num_clusters * events,
-                list(self.net.num_d2d_edges()) * events)
-            self.ledger.record_local_step(
-                self.scale.replicas * self.scale.tau)
+        ev.billing.charge(self.ledger)
         return loss
-
-    def _record_interval_comms(self, snap, events: int):
-        """Consensus + local-step ledger records for one dynamic
-        interval (no active edges -> nothing is exchanged there)."""
-        from repro.netsim import faults
-
-        gammas = np.where(snap.num_active_edges() > 0,
-                          self.scale.gamma_d2d, 0)
-        self.ledger.record_consensus(
-            list(gammas) * events,
-            list(snap.num_active_edges()) * events,
-            tail_mult_per_cluster=list(faults.consensus_tail_mult(
-                snap.delay_mult, snap.device_up, snap.adj)) * events)
-        self.ledger.record_local_step(
-            int(snap.device_up.sum()) * self.scale.tau)
 
     def save(self, path: Optional[str] = None):
         p = path or str(Path(self.tcfg.ckpt_dir)
@@ -294,17 +224,13 @@ class ScaleTrainer:
             self.ledger.uplinks_by_level = {
                 int(k): int(v)
                 for k, v in extra.get("uplinks_by_level", {}).items()}
-            # fast-forward FRESH data streams past the consumed batches
-            # (a reused trainer's generators may already be advanced;
-            # the rng positions are only reachable by drawing, so resume
-            # cost grows with training progress — fine at checkpointing
-            # cadence, not for epoch-scale skips)
-            self._make_gens()
-            for _ in range(self._train_draws):
-                for g in self._gens:
-                    next(g)
-            for _ in range(self._eval_draws):
-                next(self._eval_gen)
+            # rebuild FRESH data streams already seeked past the
+            # consumed batches (a reused trainer's generators may have
+            # advanced). The seek is O(1) — the streams are
+            # offset-addressable — so resume cost no longer grows with
+            # training progress.
+            self._make_gens(train_start=self._train_draws,
+                            eval_start=self._eval_draws)
         return self
 
     # ------------------------------------------------------------------
@@ -312,27 +238,10 @@ class ScaleTrainer:
         if self.params is None:
             self.init()
         n = intervals if intervals is not None else self.tcfg.intervals
-        events = (self.scale.tau // self.scale.consensus_every
-                  if self.scale.consensus_every else 0)
         for _ in range(n):
             batch = self._interval_batch()
             self.key, kp = jax.random.split(self.key)
-            if self.tree is not None:
-                loss = self._hierarchical_interval(batch, kp, events)
-            elif self.tvnet is None:
-                picks = jax.random.randint(
-                    kp, (self.net.num_clusters,), 0,
-                    self.scale.cluster_size)
-                self.params, loss = self._step(
-                    self.params, batch, picks, jnp.asarray(self.interval))
-                self.ledger.record_aggregation(self.net.num_clusters)
-                self.ledger.record_consensus(
-                    [self.scale.gamma_d2d] * self.net.num_clusters * events,
-                    list(self.net.num_d2d_edges()) * events)
-                self.ledger.record_local_step(
-                    self.scale.replicas * self.scale.tau)
-            else:
-                loss = self._dynamic_interval(batch, kp, events)
+            loss = self._interval(batch, kp)
             self.interval += 1
             logs = {"train_loss": float(loss),
                     "uplinks": self.ledger.uplinks,

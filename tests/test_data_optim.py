@@ -56,6 +56,20 @@ def test_token_stream_heterogeneity():
     assert b["tokens"].shape == b["labels"].shape
 
 
+def test_token_stream_is_seekable_at_any_offset():
+    """start=k must resume the EXACT start=0 sequence at batch k (O(1)
+    seek — ScaleTrainer.restore depends on it for fast resume)."""
+    ref = synthetic_token_batches(2, 16, 100, seed=0, shard_id=1)
+    batches = [next(ref) for _ in range(7)]
+    for k in (0, 1, 3, 6):
+        g = synthetic_token_batches(2, 16, 100, seed=0, shard_id=1,
+                                    start=k)
+        for want in batches[k:]:
+            got = next(g)
+            np.testing.assert_array_equal(got["tokens"], want["tokens"])
+            np.testing.assert_array_equal(got["labels"], want["labels"])
+
+
 def _quad_problem():
     """min 0.5||w - 3||^2 — every optimizer must converge."""
     w0 = {"w": jnp.zeros((4,))}

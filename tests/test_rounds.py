@@ -1,0 +1,524 @@
+"""Round-program engine parity (DESIGN.md §10).
+
+The unified resolver-driven loops must reproduce the pre-refactor
+per-scenario trainers BIT-FOR-BIT. The reference runners below are
+line-by-line transcriptions of the deleted loops (``TTHFTrainer.run``
+/ ``_run_dynamic`` / ``_run_hierarchical`` and the ``ScaleTrainer``
+static/dynamic/hierarchical intervals, at commit 08ac903), driving the
+current trainers' unchanged jitted pieces — so any drift in the key
+schedule, host RNG seeding, operator order, or ledger arithmetic shows
+up as exact-inequality here.
+
+Grid: 2 execution modes x {static, churn, stragglers, fog3,
+fog3 + churn}; plus resolver/Billing unit tests (the ledger totals the
+engine charges are the historical numbers) and the event-chunked-scan
+invariance (chunked == per-iteration dispatch, bitwise).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TopologyConfig, TTHFConfig
+from repro.core import TTHFTrainer
+from repro.core.energy import CommLedger
+from repro.data import fashion_synth, partition_noniid_labels
+from repro.hierarchy import build_event, presets
+from repro.models import make_sim_model
+from repro.netsim import scenarios
+from repro.rounds import Billing, RoundProgram, RoundResolver
+
+LEDGER_FIELDS = ("uplinks", "broadcasts", "d2d_msgs", "d2d_rounds",
+                 "local_steps", "straggler_uplink_extra",
+                 "straggler_round_extra", "uplinks_by_level")
+
+
+def ledgers_equal(a: CommLedger, b: CommLedger) -> bool:
+    return all(getattr(a, f) == getattr(b, f) for f in LEDGER_FIELDS)
+
+
+def leaves_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ===========================================================================
+# simulation mode: legacy per-scenario loops, transcribed
+# ===========================================================================
+
+def _legacy_consensus_event_static(tr, st, eta_t):
+    from repro.core.schedule import adaptive_gamma, fixed_gamma
+    algo = tr.algo
+    if algo.gamma_d2d >= 0:
+        gamma = fixed_gamma(tr.net.num_clusters, algo.gamma_d2d)
+    else:
+        ups = tr._upsilon(st.params)
+        gamma = adaptive_gamma(eta_t, algo.phi, ups, tr.lambdas,
+                               tr.net.cluster_size, tr.model_dim)
+    st.params = tr._consensus(st.params, gamma)
+    gamma_used = np.asarray(gamma)
+    tr.ledger.record_consensus(gamma_used, tr._edges)
+    return gamma_used
+
+
+def _legacy_consensus_event_dynamic(tr, st, snap, eta_t, up):
+    from repro.core.schedule import adaptive_gamma, fixed_gamma
+    from repro.netsim import faults
+    algo = tr.algo
+    if algo.gamma_d2d >= 0:
+        gamma = fixed_gamma(tr.net.num_clusters, algo.gamma_d2d)
+    else:
+        ups = tr._upsilon_dyn(st.params, up)
+        gamma = adaptive_gamma(
+            eta_t, algo.phi, ups, jnp.asarray(snap.lambdas, jnp.float32),
+            jnp.asarray(snap.active_per_cluster, jnp.int32), tr.model_dim)
+    gamma = jnp.where(jnp.asarray(snap.num_active_edges()) == 0, 0, gamma)
+    st.params = tr._consensus_dyn(st.params, jnp.asarray(snap.V), gamma)
+    gamma_used = np.asarray(gamma)
+    tr.ledger.record_consensus(
+        gamma_used, snap.num_active_edges(),
+        tail_mult_per_cluster=faults.consensus_tail_mult(
+            snap.delay_mult, snap.device_up, snap.adj))
+    return gamma_used
+
+
+def legacy_sim_run(tr, steps, seed=0, eval_every=5):
+    """The pre-engine ``run``/``_run_dynamic``/``_run_hierarchical``
+    dispatch, verbatim, on a fresh trainer (its resolver untouched —
+    only the jitted pieces, tvnet/tree, and the ledger are used)."""
+    from repro.netsim import faults
+
+    st = tr.init(seed)
+    hist = {"loss": [], "acc": [], "disp": [], "gamma": [], "uplinks": [],
+            "active": []}
+    algo = tr.algo
+    N, s = tr.net.num_clusters, tr.net.cluster_size
+
+    for t in range(st.t + 1, st.t + steps + 1):
+        eta_t = tr.eta(t - 1)
+        st.key, k_step, k_agg = jax.random.split(st.key, 3)
+        snap = tr.tvnet.snapshot(t) if tr.tvnet is not None else None
+        if snap is None:
+            st.params = tr._local_step(st.params, k_step, eta_t)
+            tr.ledger.record_local_step(tr.data.num_devices)
+        else:
+            up = jnp.asarray(snap.device_up)
+            st.params = tr._local_step_dyn(st.params, k_step, eta_t,
+                                           up.reshape(-1))
+            tr.ledger.record_local_step(int(snap.device_up.sum()))
+
+        gamma_used = np.zeros((N,), np.int32)
+        if algo.is_consensus_step(t):
+            if snap is None:
+                gamma_used = _legacy_consensus_event_static(tr, st, eta_t)
+            else:
+                gamma_used = _legacy_consensus_event_dynamic(
+                    tr, st, snap, eta_t, up)
+
+        if algo.is_aggregation_step(t):
+            if tr.tree is not None:
+                rng = np.random.default_rng(
+                    int(jax.random.randint(k_agg, (), 0, 2**31 - 1)))
+                device_up = (snap.device_up if snap is not None
+                             else np.ones((N, s), bool))
+                ev = build_event(rng, tr.tree, tr.hierarchy, t, device_up,
+                                 receive_offline=False)
+                if ev is not None and ev.total_uplinks > 0:
+                    if ev.global_weights is not None:
+                        st.global_params = tr._global_from_weights(
+                            st.params, jnp.asarray(ev.global_weights))
+                    st.params = tr._apply_event(
+                        st.params, jnp.asarray(ev.device_matrix))
+                    tr.ledger.record_hierarchy_event(
+                        ev.uplinks_by_level,
+                        uplink_delay_mults=(faults.uplink_tail_mults(
+                            snap.delay_mult, ev.picks, ev.counts)
+                            if snap is not None else None))
+            elif snap is None:
+                full = algo.full_participation or algo.mode != "tthf"
+                g, st.params = tr._aggregate(st.params, k_agg, full=full)
+                st.global_params = g
+                n_up = (tr.data.num_devices if full
+                        else N * algo.sample_per_cluster)
+                tr.ledger.record_aggregation(n_up)
+            else:
+                full = algo.full_participation or algo.mode != "tthf"
+                if full:
+                    weights = faults.full_participation_weights(
+                        snap.device_up, np.asarray(tr.net.varrho))
+                    n_up = int(snap.device_up.sum())
+                    mults = snap.delay_mult[snap.device_up]
+                else:
+                    rng = np.random.default_rng(
+                        int(jax.random.randint(k_agg, (), 0, 2**31 - 1)))
+                    picks, counts = faults.availability_sample(
+                        rng, snap.device_up, k=algo.sample_per_cluster)
+                    weights = faults.aggregation_weights(
+                        picks, counts, snap.varrho, s)
+                    n_up = int(counts.sum())
+                    mults = faults.uplink_tail_mults(
+                        snap.delay_mult, picks, counts)
+                if n_up > 0:
+                    g, st.params = tr._aggregate_dyn(
+                        st.params, jnp.asarray(weights, jnp.float32),
+                        jnp.asarray(snap.device_up).reshape(-1))
+                    st.global_params = g
+                    tr.ledger.record_aggregation(
+                        n_up, uplink_delay_mults=mults)
+
+        if t % eval_every == 0 or t == st.t + steps:
+            loss, acc = tr._eval(st.global_params)
+            hist["loss"].append(float(loss))
+            hist["acc"].append(float(acc))
+            hist["disp"].append(float(tr._dispersion(st.params)))
+            hist["gamma"].append(gamma_used.copy())
+            hist["uplinks"].append(tr.ledger.uplinks)
+            hist["active"].append(int(snap.device_up.sum())
+                                  if snap is not None
+                                  else tr.data.num_devices)
+    st.t += steps
+    return st, hist
+
+
+@pytest.fixture(scope="module")
+def sim_data():
+    x, y = fashion_synth(num_points=800, seed=0)
+    return x, y
+
+
+def _sim_world(sim_data, devices, clusters):
+    x, y = sim_data
+    data = partition_noniid_labels(x, y, num_devices=devices)
+    topo = TopologyConfig(num_devices=devices, num_clusters=clusters,
+                          graph="geometric", seed=0)
+    model = make_sim_model("svm", 784, 10)
+    return data, topo, model
+
+
+ALGO10 = TTHFConfig(tau=10, consensus_every=5, gamma_d2d=2,
+                    constant_lr=0.002)
+ALGO5 = TTHFConfig(tau=5, consensus_every=5, gamma_d2d=2,
+                   constant_lr=0.002)
+
+SIM_GRID = {
+    "static": dict(algo=ALGO10, world=(20, 4)),
+    "churn": dict(algo=ALGO10, world=(20, 4),
+                  dyn=("device_churn", 1)),
+    "stragglers": dict(algo=ALGO10, world=(20, 4),
+                       dyn=("stragglers", 1)),
+    "fog3": dict(algo=ALGO5, world=(24, 8), hier="fog3"),
+    "fog3_churn": dict(algo=ALGO5, world=(24, 8), hier="fog3",
+                       dyn=("device_churn", 2)),
+    # the adaptive Remark-1 gamma path must survive the merge too
+    "churn_adaptive": dict(
+        algo=TTHFConfig(tau=10, consensus_every=5, gamma_d2d=-1,
+                        phi=1.0, constant_lr=0.002),
+        world=(20, 4), dyn=("markov_links", 1)),
+}
+
+
+def _sim_trainer(sim_data, case):
+    data, topo, model = _sim_world(sim_data, *case["world"])
+    dyn = (scenarios.get(case["dyn"][0], seed=case["dyn"][1])
+           if "dyn" in case else None)
+    hier = (presets.get(case["hier"], tau=case["algo"].tau)
+            if "hier" in case else None)
+    return TTHFTrainer(model, data, topo, case["algo"], batch_size=8,
+                       dynamics=dyn, hierarchy=hier)
+
+
+@pytest.mark.parametrize("name", sorted(SIM_GRID))
+def test_sim_parity_bit_for_bit(sim_data, name):
+    case = SIM_GRID[name]
+    steps = 20
+
+    ref = _sim_trainer(sim_data, case)
+    st_ref, h_ref = legacy_sim_run(ref, steps=steps, seed=0)
+
+    new = _sim_trainer(sim_data, case)
+    st_new, h_new = new.run(steps=steps, eval_every=5, seed=0)
+
+    assert h_ref["loss"] == h_new.global_loss        # exact float equality
+    assert h_ref["acc"] == h_new.global_acc
+    assert h_ref["disp"] == h_new.dispersion
+    assert h_ref["uplinks"] == h_new.uplinks
+    assert h_ref["active"] == h_new.active_devices
+    assert all(np.array_equal(a, b)
+               for a, b in zip(h_ref["gamma"], h_new.gamma_used))
+    assert leaves_equal(st_ref.params, st_new.params)
+    assert leaves_equal(st_ref.global_params, st_new.global_params)
+    assert ledgers_equal(ref.ledger, new.ledger)
+
+
+def test_scanned_spans_match_per_iteration_dispatch(sim_data):
+    """chunked=True (one lax.scan per inter-event span) and
+    chunked=False (one dispatch per iteration — the historical cadence)
+    must be bitwise interchangeable."""
+    for case in (SIM_GRID["static"], SIM_GRID["churn"]):
+        a = _sim_trainer(sim_data, case)
+        _, ha = a.run(steps=15, eval_every=5, seed=0)
+        b = _sim_trainer(sim_data, case)
+        b.chunked = False
+        _, hb = b.run(steps=15, eval_every=5, seed=0)
+        assert ha.global_loss == hb.global_loss
+        assert ha.dispersion == hb.dispersion
+        assert ledgers_equal(a.ledger, b.ledger)
+
+
+# ===========================================================================
+# scale mode: legacy interval loops, transcribed
+# ===========================================================================
+
+def legacy_scale_run(tr, intervals):
+    """The pre-engine ``ScaleTrainer.run`` three-way interval dispatch,
+    verbatim, driving the current trainer's step/batch/key plumbing."""
+    from repro.core.mixing import refresh_matrices
+    from repro.netsim import faults
+
+    def record_interval_comms(snap, events):
+        gammas = np.where(snap.num_active_edges() > 0,
+                          tr.scale.gamma_d2d, 0)
+        tr.ledger.record_consensus(
+            list(gammas) * events,
+            list(snap.num_active_edges()) * events,
+            tail_mult_per_cluster=list(faults.consensus_tail_mult(
+                snap.delay_mult, snap.device_up, snap.adj)) * events)
+        tr.ledger.record_local_step(
+            int(snap.device_up.sum()) * tr.scale.tau)
+
+    if tr.params is None:
+        tr.init()
+    events = (tr.scale.tau // tr.scale.consensus_every
+              if tr.scale.consensus_every else 0)
+    for _ in range(intervals):
+        batch = tr._interval_batch()
+        tr.key, kp = jax.random.split(tr.key)
+        if tr.tree is not None:
+            snap = refresh = None
+            if tr.tvnet is not None:
+                snap = tr.tvnet.snapshot(tr.interval + 1)
+                refresh = (refresh_matrices(tr._plan, snap.V)
+                           if tr._plan is not None else None)
+                device_up = snap.device_up
+            else:
+                device_up = np.ones((tr.scale.num_clusters,
+                                     tr.scale.cluster_size), bool)
+            rng = np.random.default_rng(
+                int(jax.random.randint(kp, (), 0, 2**31 - 1)))
+            ev = build_event(rng, tr.tree, tr.hierarchy,
+                             (tr.interval + 1) * tr.scale.tau, device_up,
+                             receive_offline=True)
+            args = (tr.params, batch, jnp.asarray(ev.device_matrix),
+                    jnp.asarray(tr.interval))
+            if refresh is not None:
+                tr.params, _ = tr._step(*args, refresh)
+            else:
+                tr.params, _ = tr._step(*args)
+            if ev.global_weights is not None and ev.total_uplinks:
+                tr._global = jax.tree.map(lambda l: l[0], tr.params)
+            if ev.total_uplinks:
+                tr.ledger.record_hierarchy_event(
+                    ev.uplinks_by_level,
+                    uplink_delay_mults=(faults.uplink_tail_mults(
+                        snap.delay_mult, ev.picks, ev.counts)
+                        if snap is not None else None))
+            if snap is not None:
+                record_interval_comms(snap, events)
+            else:
+                tr.ledger.record_consensus(
+                    [tr.scale.gamma_d2d] * tr.net.num_clusters * events,
+                    list(tr.net.num_d2d_edges()) * events)
+                tr.ledger.record_local_step(
+                    tr.scale.replicas * tr.scale.tau)
+        elif tr.tvnet is None:
+            picks = jax.random.randint(
+                kp, (tr.net.num_clusters,), 0, tr.scale.cluster_size)
+            tr.params, _ = tr._step(tr.params, batch, picks,
+                                    jnp.asarray(tr.interval))
+            tr.ledger.record_aggregation(tr.net.num_clusters)
+            tr.ledger.record_consensus(
+                [tr.scale.gamma_d2d] * tr.net.num_clusters * events,
+                list(tr.net.num_d2d_edges()) * events)
+            tr.ledger.record_local_step(tr.scale.replicas * tr.scale.tau)
+        else:
+            snap = tr.tvnet.snapshot(tr.interval + 1)
+            refresh = (refresh_matrices(tr._plan, snap.V)
+                       if tr._plan is not None else None)
+            rng = np.random.default_rng(
+                int(jax.random.randint(kp, (), 0, 2**31 - 1)))
+            picks_np, counts = faults.availability_sample(
+                rng, snap.device_up, k=tr.scale.sample_per_cluster)
+            if refresh is not None:
+                agg_w = jnp.asarray(faults.aggregation_weights(
+                    picks_np, counts, snap.varrho,
+                    tr.scale.cluster_size), jnp.float32)
+                tr.params, _ = tr._step(tr.params, batch, agg_w,
+                                        jnp.asarray(tr.interval), refresh)
+            else:
+                picks = jnp.asarray(
+                    np.where(counts > 0, picks_np[:, 0], 0), jnp.int32)
+                tr.params, _ = tr._step(tr.params, batch, picks,
+                                        jnp.asarray(tr.interval))
+            tr.ledger.record_aggregation(
+                int(counts.sum()),
+                uplink_delay_mults=faults.uplink_tail_mults(
+                    snap.delay_mult, picks_np, counts))
+            record_interval_comms(snap, events)
+        tr.interval += 1
+    return tr
+
+
+@pytest.fixture(scope="module")
+def scale_world():
+    from repro.configs import get_arch
+    from repro.core.distributed import TTHFScaleConfig
+    from repro.train import TrainerConfig
+    cfg = get_arch("qwen1.5-0.5b").reduced(num_layers=2, d_model=64,
+                                           d_ff=128, vocab_size=128)
+    scale = TTHFScaleConfig(replicas=8, cluster_size=2, tau=2,
+                            consensus_every=2, gamma_d2d=2, lr=0.05)
+    tcfg = TrainerConfig(batch_per_replica=2, seq_len=16, intervals=3,
+                         eval_every=0, eval_batches=1)
+    return cfg, scale, tcfg
+
+
+SCALE_GRID = {
+    "static": dict(),
+    "churn": dict(dyn=("device_churn", 2)),
+    "stragglers": dict(dyn=("stragglers", 1)),
+    "fog3": dict(hier="fog3"),
+    "fog3_churn": dict(hier="fog3", dyn=("device_churn", 3)),
+}
+
+
+def _scale_trainer(scale_world, case):
+    from repro.train import ScaleTrainer
+    cfg, scale, tcfg = scale_world
+    dyn = (scenarios.get(case["dyn"][0], seed=case["dyn"][1])
+           if "dyn" in case else None)
+    hier = (presets.get(case["hier"], tau=scale.tau)
+            if "hier" in case else None)
+    return ScaleTrainer(cfg, scale, tcfg, dynamics=dyn, hierarchy=hier)
+
+
+@pytest.mark.parametrize("name", sorted(SCALE_GRID))
+def test_scale_parity_bit_for_bit(scale_world, name):
+    case = SCALE_GRID[name]
+    ref = legacy_scale_run(_scale_trainer(scale_world, case).init(), 3)
+    new = _scale_trainer(scale_world, case).init()
+    new.run(3)
+    assert leaves_equal(ref.params, new.params)
+    assert leaves_equal(ref._global_params(), new._global_params())
+    assert ledgers_equal(ref.ledger, new.ledger)
+
+
+def test_scale_static_multi_sampling_bills_real_uplinks(scale_world):
+    """sample_per_cluster = k > 1 on the STATIC path: all k picks enter
+    the aggregate through the (N, s) weight form, the ledger bills
+    N * k real uplinks (it used to draw one device and bill N), and the
+    broadcast still syncs every replica."""
+    import dataclasses as dc
+    from repro.train import ScaleTrainer
+    cfg, scale, tcfg = scale_world
+    k = 2
+    tr = ScaleTrainer(cfg, dc.replace(scale, sample_per_cluster=k),
+                      tcfg).init()
+    tr.run(3)
+    assert tr.ledger.uplinks == 3 * scale.num_clusters * k
+    assert tr.ledger.uplinks_by_level == {1: 3 * scale.num_clusters * k}
+    for leaf in jax.tree.leaves(tr.params):
+        arr = np.asarray(leaf)
+        assert np.isfinite(arr).all()
+        np.testing.assert_allclose(
+            arr, np.broadcast_to(arr[0:1], arr.shape), atol=1e-6)
+
+
+# ===========================================================================
+# resolver / Billing unit tests: the charged totals are the ledger's
+# historical numbers
+# ===========================================================================
+
+def test_billing_flat_aggregation_matches_record_aggregation():
+    a, b = CommLedger(), CommLedger()
+    a.record_aggregation(7, uplink_delay_mults=[2.0, 1.0])
+    Billing(uplinks_by_level={1: 7},
+            uplink_delay_mults=np.asarray([2.0, 1.0])).charge(b)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+def test_billing_consensus_repeats_match_interval_lists():
+    gammas, edges, tail = [2, 0, 2], [3, 0, 1], [1.5, 1.0, 1.0]
+    a, b = CommLedger(), CommLedger()
+    a.record_consensus(gammas * 4, edges * 4,
+                       tail_mult_per_cluster=tail * 4)
+    Billing(consensus_gammas=np.asarray(gammas),
+            consensus_edges=np.asarray(edges),
+            consensus_tail=np.asarray(tail),
+            consensus_repeats=4).charge(b)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+def test_billing_runtime_gamma_and_skip_semantics():
+    a, b = CommLedger(), CommLedger()
+    a.record_consensus([1, 3], [2, 2])
+    Billing(consensus_edges=np.asarray([2, 2])).charge(
+        b, gamma_used=np.asarray([1, 3]))
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    # nothing transmitted: no uplinks AND no broadcast
+    c = CommLedger()
+    Billing(uplinks_by_level=None).charge(c, gamma_used=np.zeros(2))
+    assert c.uplinks == 0 and c.broadcasts == 0
+    # a transmitted-but-empty aggregation (scale all-dark) still
+    # broadcasts — the historical record_aggregation(0) semantics
+    d = CommLedger()
+    Billing(uplinks_by_level={1: 0}).charge(d)
+    assert d.uplinks == 0 and d.broadcasts == 1
+
+
+def test_sim_resolver_static_billing_totals(sim_data):
+    """One tau of the static program charges exactly the historical
+    ledger: I local device-steps per iteration, N*k uplinks + one
+    broadcast per aggregation, Gamma rounds (2 x edges msgs) per
+    consensus event."""
+    tr = _sim_trainer(sim_data, SIM_GRID["static"])
+    _, _ = tr.run(steps=10, eval_every=5, seed=0)
+    N = tr.net.num_clusters
+    assert tr.ledger.local_steps == 10 * tr.data.num_devices
+    assert tr.ledger.uplinks == N * tr.algo.sample_per_cluster
+    assert tr.ledger.broadcasts == 1
+    assert tr.ledger.d2d_rounds == 2 * N * tr.algo.gamma_d2d
+    assert tr.ledger.d2d_msgs == sum(
+        2 * tr.algo.gamma_d2d * 2 * int(e) for e in tr.net.num_d2d_edges())
+
+
+def test_resolver_span_end_knows_the_calendar(sim_data):
+    data, topo, model = _sim_world(sim_data, 20, 4)
+    tr = TTHFTrainer(model, data, topo, ALGO10, batch_size=8)
+    res = tr._resolver
+    # consensus every 5, aggregation every 10, eval every 20
+    assert res.span_end(1, 100, 20) == 5
+    assert res.span_end(6, 100, 20) == 10
+    assert res.span_end(11, 100, 20) == 15
+    assert res.span_end(16, 100, 20) == 20
+    # t_last is always a boundary even off-calendar
+    assert res.span_end(21, 23, 100) == 23
+
+
+def test_round_program_flat_static_is_identity(sim_data):
+    """A static-dynamics + flat-hierarchy program IS the bare paper
+    setting: no tvnet, no tree, and the trainer takes the historical
+    static path bit-for-bit."""
+    data, topo, model = _sim_world(sim_data, 20, 4)
+    prog = RoundProgram(dynamics=scenarios.get("static"),
+                        hierarchy=presets.get("flat", tau=10))
+    assert not prog.is_dynamic and not prog.is_hierarchical
+    tr0 = TTHFTrainer(model, data, topo, ALGO10, batch_size=8)
+    _, h0 = tr0.run(steps=10, eval_every=5, seed=0)
+    tr1 = TTHFTrainer(model, data, topo, ALGO10, batch_size=8,
+                      program=prog)
+    assert tr1.tvnet is None and tr1.tree is None
+    _, h1 = tr1.run(steps=10, eval_every=5, seed=0)
+    assert h0.global_loss == h1.global_loss
+    assert ledgers_equal(tr0.ledger, tr1.ledger)
