@@ -15,7 +15,8 @@ import traceback
 
 SUITES = ("fig4_gamma", "fig5_tau", "fig6_energy", "theory_bound",
           "kernel_bench", "scale_sync", "topology_ablation", "roofline",
-          "dynamics_bench", "hierarchy_bench", "rounds_bench")
+          "dynamics_bench", "hierarchy_bench", "rounds_bench",
+          "serving_bench")
 
 
 def main(argv=None) -> int:

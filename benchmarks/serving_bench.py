@@ -1,0 +1,97 @@
+"""Wave vs continuous batching under a Poisson arrival trace.
+
+One reduced arch per family (dense / moe / ssm / hybrid) serves the
+same seeded trace through both schedulers; the derived column records
+decode steps, generated tokens, slot utilization, and wall-clock tok/s.
+Continuous batching should finish the trace in fewer decode steps —
+freed slots are re-prefilled while the rest of the batch keeps
+decoding, instead of idling until the wave drains.
+
+  PYTHONPATH=src python -m benchmarks.serving_bench
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, append_trajectory
+
+ARCH_BY_KIND = {
+    "dense": "qwen1.5-0.5b",
+    "moe": "llama4-scout-17b-a16e",
+    "ssm": "mamba2-370m",
+    "hybrid": "recurrentgemma-9b",
+}
+
+
+def _reduced_cfg(name):
+    from repro.configs import get_arch
+    cfg = get_arch(name).reduced(num_layers=2, d_model=128, d_ff=256,
+                                 vocab_size=256)
+    if cfg.kind == "hybrid":
+        cfg = dataclasses.replace(cfg, attention_window=16)
+    if cfg.moe_num_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    return cfg
+
+
+def _trace(rng, n_req, max_prompt, gap):
+    """Poisson arrivals with mixed prompt lengths and budgets."""
+    from repro.serving.scheduler import Request
+    arrivals, step = [], 0
+    for rid in range(n_req):
+        plen = int(rng.integers(max(2, max_prompt // 4), max_prompt + 1))
+        prompt = rng.integers(1, 250, size=plen).astype(np.int32)
+        arrivals.append((step, Request(rid=rid, prompt=prompt,
+                                       max_new=int(rng.integers(4, 13)))))
+        step += int(rng.poisson(gap))
+    return arrivals
+
+
+def run(scale: str = "ci", seed: int = 0):
+    import jax
+    from repro.models import build_model
+    from repro.serving.scheduler import make_scheduler, run_trace
+
+    n_req = 12 if scale == "ci" else 48
+    slots, max_prompt, max_total = 4, 16, 48
+    rows = []
+    for kind, name in ARCH_BY_KIND.items():
+        cfg = _reduced_cfg(name)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        per_sched = {}
+        for sname in ("wave", "continuous"):
+            rng = np.random.default_rng(seed)     # identical trace
+            arrivals = _trace(rng, n_req, max_prompt, gap=1.0)
+            sched = make_scheduler(sname, model, slots=slots,
+                                   max_prompt=max_prompt,
+                                   max_total=max_total, temperature=0.0,
+                                   seed=seed)
+            t0 = time.time()
+            stats = run_trace(sched, params, arrivals)
+            dt = time.time() - t0
+            assert stats.requests_done == n_req, (kind, sname, stats)
+            per_sched[sname] = stats
+            rows.append(Row(
+                f"serving/{kind}/{sname}", dt * 1e6 / max(
+                    stats.decode_steps, 1),
+                f"decode_steps={stats.decode_steps};"
+                f"toks={stats.tokens_generated};"
+                f"util={stats.utilization:.3f};"
+                f"tok_per_step={stats.tokens_generated / max(stats.decode_steps, 1):.2f};"
+                f"tok_s={stats.tokens_generated / max(dt, 1e-9):.1f}"))
+        w, c = per_sched["wave"], per_sched["continuous"]
+        rows.append(Row(
+            f"serving/{kind}/speedup", 0.0,
+            f"steps_wave={w.decode_steps};steps_cont={c.decode_steps};"
+            f"step_ratio={w.decode_steps / max(c.decode_steps, 1):.2f}"))
+    append_trajectory("serving", rows, scale)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

@@ -1,8 +1,15 @@
 """Serving driver: batched prefill + decode of a model-zoo arch.
 
+Three modes:
+  direct      — one fixed batch, joint prefill, lockstep decode
+  wave        — BatchScheduler: admit a wave, drain, admit the next
+  continuous  — ContinuousScheduler: per-slot admission/retirement
+
 Example (CPU, reduced config):
   python -m repro.launch.serve --arch mamba2-370m --reduced \
       --batch 4 --prompt-len 64 --gen 16
+  python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
+      --scheduler continuous --requests 12 --gen 16
 """
 from __future__ import annotations
 
@@ -10,6 +17,36 @@ import argparse
 import time
 
 import numpy as np
+
+
+def _run_scheduler(args, cfg, model, params):
+    from repro.serving.scheduler import Request, make_scheduler, run_trace
+
+    rng = np.random.default_rng(args.seed)
+    sched = make_scheduler(args.scheduler, model, slots=args.batch,
+                           max_prompt=args.prompt_len,
+                           max_total=args.prompt_len + args.gen,
+                           temperature=args.temperature, seed=args.seed)
+    arrivals = []
+    step = 0
+    for rid in range(args.requests):
+        plen = int(rng.integers(max(1, args.prompt_len // 4),
+                                args.prompt_len + 1))
+        prompt = rng.integers(1, cfg.vocab_size, size=plen).astype(np.int32)
+        arrivals.append((step, Request(rid=rid, prompt=prompt,
+                                       max_new=args.gen)))
+        step += int(rng.poisson(args.arrival_gap))
+    t0 = time.time()
+    stats = run_trace(sched, params, arrivals)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} scheduler={args.scheduler} slots={args.batch} "
+          f"requests={args.requests}")
+    print(f"done={stats.requests_done} prefills={stats.prefills} "
+          f"decode_steps={stats.decode_steps} "
+          f"tokens={stats.tokens_generated} "
+          f"util={stats.utilization:.2f} "
+          f"({stats.tokens_generated / max(dt, 1e-9):.1f} tok/s)")
+    return 0
 
 
 def main(argv=None):
@@ -21,12 +58,21 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--scheduler", default="direct",
+                    choices=["direct", "wave", "continuous"],
+                    help="direct: one fixed batch; wave/continuous: "
+                         "request schedulers over --requests arrivals")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of requests for scheduler modes")
+    ap.add_argument("--arrival-gap", type=float, default=2.0,
+                    help="mean Poisson inter-arrival gap (decode steps)")
     args = ap.parse_args(argv)
 
     import jax
     import jax.numpy as jnp
     from repro.configs import get_arch
     from repro.models import build_model
+    from repro.serving.sampling import sample_tokens
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -34,6 +80,9 @@ def main(argv=None):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     key = jax.random.PRNGKey(args.seed + 1)
+
+    if args.scheduler != "direct":
+        return _run_scheduler(args, cfg, model, params)
 
     B, T = args.batch, args.prompt_len
     tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
@@ -58,13 +107,9 @@ def main(argv=None):
     t0 = time.time()
     for i in range(args.gen):
         key, ks = jax.random.split(key)
-        if args.temperature > 0:
-            tok = jax.random.categorical(
-                ks, logits[:, -1] / args.temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        tok = sample_tokens(logits, temperature=args.temperature, key=ks)
         out_tokens.append(np.asarray(tok)[:, 0])
-        logits, cache = decode(params, tok.astype(jnp.int32), cache, pos)
+        logits, cache = decode(params, tok, cache, pos)
         pos = pos + 1
     t_decode = time.time() - t0
 

@@ -572,8 +572,9 @@ def decode_attention(p, cfg, x, cache, pos, *, window=0,
                      kv_source_cache=None):
     """One-token attention step.
 
-    x: (B, 1, d); cache: {'k','v'} (B, S, K, hd); pos: scalar int32 —
-    the absolute position of the new token. Returns (out, new_cache).
+    x: (B, 1, d); cache: {'k','v'} (B, S, K, hd); pos: int32 scalar or
+    ``(B,)`` vector — the absolute position of each slot's new token
+    (a scalar broadcasts to all slots). Returns (out, new_cache).
 
     Ring-buffer semantics when window > 0 and S == window: slot =
     pos % window and all cache entries are valid once pos >= window.
@@ -592,29 +593,40 @@ def decode_attention(p, cfg, x, cache, pos, *, window=0,
         out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
         return out @ p["wo"].astype(x.dtype), cache
 
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim > 0                          # (B,) vector positions
+    pos = jnp.broadcast_to(pos.reshape(-1), (B,))
+
     k_new, v_new = _project_kv(p, cfg, x)
     if cfg.rope:
-        pos_arr = jnp.full((1,), pos, jnp.int32)[None, :]  # (1,1) -> bcast B
+        pos_arr = pos[:1, None] if not per_slot else pos[:, None]  # bcast B
         q = rope(q.reshape(B, 1, -1, cfg.head_dim), pos_arr,
                  cfg.rope_theta).reshape(q.shape)
         k_new = rope(k_new, pos_arr, cfg.rope_theta)
 
     S = cache["k"].shape[1]
     slot = jnp.where(window > 0, pos % jnp.maximum(S, 1), pos)
-    slot = jnp.minimum(slot, S - 1)
-    k = jax.lax.dynamic_update_slice(
-        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(
-        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    slot = jnp.minimum(slot, S - 1)                  # (B,)
+    if per_slot:
+        bi = jnp.arange(B)
+        k = cache["k"].at[bi, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[bi, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        # aligned batch: one contiguous slice update beats a scatter
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot[0], 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot[0], 0, 0))
 
     scale = cfg.head_dim ** -0.5
     s = _gqa_scores(q * scale, k.astype(q.dtype))    # (B,K,G,1,S)
     k_pos = jnp.arange(S)
     if window > 0:
-        valid = (k_pos <= slot) | (pos >= S)          # ring: all valid when full
+        # ring: all valid once a slot's position wraps past the window
+        valid = (k_pos[None, :] <= slot[:, None]) | (pos[:, None] >= S)
     else:
-        valid = k_pos <= pos
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        valid = k_pos[None, :] <= pos[:, None]       # (B, S)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = _gqa_out(w, v.astype(q.dtype)).astype(x.dtype)
     out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)

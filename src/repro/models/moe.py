@@ -47,7 +47,8 @@ def _group_size(G: int, target: int = 2048) -> int:
     return G // n
 
 
-def apply_moe(p, cfg, x: jax.Array, capacity_factor: float | None = None):
+def apply_moe(p, cfg, x: jax.Array, capacity_factor: float | None = None,
+              token_mask: jax.Array | None = None):
     """x: (B, T, D) -> (y, aux) with y: (B, T, D).
 
     Dispatch/combine are ONE-HOT EINSUMS over token groups (no scatter):
@@ -56,6 +57,15 @@ def apply_moe(p, cfg, x: jax.Array, capacity_factor: float | None = None):
     into an expert-sharded buffer makes the partitioner replicate the
     whole token stream. Capacity is per group (Switch-style dropping);
     the dispatch one-hot costs ~(E*c/3F) of the expert FLOPs (~8%).
+
+    ``token_mask``: optional (B, T) bool — False tokens (serving pad)
+    are excluded from dispatch entirely: they consume no expert
+    capacity, contribute nothing to the load-balance stats, and get
+    y = 0 (residual passthrough). Masked mode also makes token groups
+    PER ROW (n = B, s = T) so routing and capacity are row-independent:
+    a slot in a mixed batch dispatches exactly like the same prompt in
+    a batch-1 prefill of the same padded length — no cross-request
+    capacity interference in serving.
     """
     from repro.dist.sharding import hint
     B, T, D = x.shape
@@ -64,8 +74,11 @@ def apply_moe(p, cfg, x: jax.Array, capacity_factor: float | None = None):
         capacity_factor = cfg.moe_capacity_factor
     G = B * T
     dt = x.dtype
-    s = _group_size(G)
-    n = G // s
+    if token_mask is not None:
+        s, n = T, B
+    else:
+        s = _group_size(G)
+        n = G // s
     c = int(max(1, round(s * capacity_factor / E)))
     xg = hint(x.reshape(n, s, D), ("pod", "data"), None, None)
 
@@ -76,6 +89,9 @@ def apply_moe(p, cfg, x: jax.Array, capacity_factor: float | None = None):
     gate = jnp.max(probs, axis=-1)                           # (n, s)
 
     onehot_e = jax.nn.one_hot(eid, E, dtype=jnp.float32)     # (n, s, E)
+    if token_mask is not None:
+        keep_tok = token_mask.reshape(n, s).astype(jnp.float32)
+        onehot_e = onehot_e * keep_tok[..., None]
     pos_in_e = jnp.cumsum(onehot_e, axis=1) - onehot_e       # (n, s, E)
     pos = jnp.sum(pos_in_e * onehot_e, axis=-1)              # (n, s) f32
     keep = pos < c
@@ -104,11 +120,23 @@ def apply_moe(p, cfg, x: jax.Array, capacity_factor: float | None = None):
     y = hint(y, ("pod", "data"), None, None)
     y = y * gate[..., None].astype(dt)
 
-    # aux: Switch load-balance + z-loss
-    frac_tokens = jnp.mean(onehot_e, axis=(0, 1))            # f_e
-    frac_probs = jnp.mean(probs, axis=(0, 1))                # p_e
+    # aux: Switch load-balance + z-loss (over real tokens only when a
+    # token_mask is given — pads must not bias the router losses)
+    lse2 = jax.scipy.special.logsumexp(logits, axis=-1) ** 2
+    if token_mask is None:
+        frac_tokens = jnp.mean(onehot_e, axis=(0, 1))        # f_e
+        frac_probs = jnp.mean(probs, axis=(0, 1))            # p_e
+        z_loss = jnp.mean(lse2)
+        drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    else:
+        n_real = jnp.maximum(jnp.sum(keep_tok), 1.0)
+        frac_tokens = jnp.sum(onehot_e, axis=(0, 1)) / n_real
+        frac_probs = jnp.sum(probs * keep_tok[..., None],
+                             axis=(0, 1)) / n_real
+        z_loss = jnp.sum(lse2 * keep_tok) / n_real
+        drop_frac = 1.0 - jnp.sum(keep.astype(jnp.float32)
+                                  * keep_tok) / n_real
     lb_loss = E * jnp.sum(frac_tokens * frac_probs)
-    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
     aux = {"load_balance": lb_loss, "router_z": z_loss,
-           "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+           "drop_frac": drop_frac}
     return y.reshape(B, T, D), aux

@@ -62,11 +62,16 @@ class ModelApi:
     # -- serving --------------------------------------------------------
     def prefill(self, params, batch, *, dtype=jnp.bfloat16,
                 cache_dtype=jnp.bfloat16, serve_window=0, remat=True,
-                cache_len=None):
+                cache_len=None, lengths=None):
         return serve.prefill(params, self.cfg, batch, dtype=dtype,
                              cache_dtype=cache_dtype,
                              serve_window=serve_window, remat=remat,
-                             cache_len=cache_len)
+                             cache_len=cache_len, lengths=lengths)
+
+    def write_cache_slot(self, cache, one_cache, slot, *, pos=None,
+                         one_pos=None):
+        return serve.write_cache_slot(self.cfg, cache, one_cache, slot,
+                                      pos=pos, one_pos=one_pos)
 
     def decode_step(self, params, token, cache, pos, *, dtype=jnp.bfloat16,
                     serve_window=0):

@@ -1,6 +1,8 @@
 from repro.serving.engine import (
     init_cache_tree, cache_logical_axes_tree, prefill, decode_step,
+    write_cache_slot,
 )
+from repro.serving.sampling import sample_tokens
 
 __all__ = ["init_cache_tree", "cache_logical_axes_tree", "prefill",
-           "decode_step"]
+           "decode_step", "write_cache_slot", "sample_tokens"]

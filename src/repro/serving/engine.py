@@ -147,25 +147,56 @@ def cache_logical_axes_tree(cfg, long_context: bool = False):
 # prefill
 # ---------------------------------------------------------------------------
 
-def _ring_fill(k_all, v_all, S, dtype):
-    """Place the last S tokens of (B, T, K, hd) into ring slots t % S."""
+def _ring_fill(k_all, v_all, S, dtype, lengths=None):
+    """Place the last S tokens of (B, T, K, hd) into ring slots t % S.
+
+    With per-request ``lengths`` (B,), each row i keeps the last S of its
+    own ``lengths[i]`` valid (right-aligned) tokens; ring slots that no
+    valid token maps to are zeroed, so padded prefixes never enter the
+    cache.
+    """
     T = k_all.shape[1]
-    if T <= S:
-        pad = S - T
-        k = jnp.pad(k_all, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v_all, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        return k.astype(dtype), v.astype(dtype)
-    idx = T - S + jnp.arange(S)
-    slots = idx % S
-    k = jnp.zeros((k_all.shape[0], S) + k_all.shape[2:], dtype)
-    v = jnp.zeros_like(k)
-    k = k.at[:, slots].set(k_all[:, idx].astype(dtype))
-    v = v.at[:, slots].set(v_all[:, idx].astype(dtype))
-    return k, v
+    if lengths is None:
+        if T <= S:
+            pad = S - T
+            k = jnp.pad(k_all, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v_all, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return k.astype(dtype), v.astype(dtype)
+        idx = T - S + jnp.arange(S)
+        slots = idx % S
+        k = jnp.zeros((k_all.shape[0], S) + k_all.shape[2:], dtype)
+        v = jnp.zeros_like(k)
+        k = k.at[:, slots].set(k_all[:, idx].astype(dtype))
+        v = v.at[:, slots].set(v_all[:, idx].astype(dtype))
+        return k, v
+    # largest valid token index t with t ≡ s (mod S), per row
+    s = jnp.arange(S)[None, :]                              # (1, S)
+    t = s + S * ((lengths[:, None] - 1 - s) // S)           # (B, S)
+    valid = t >= 0
+    idx = jnp.clip(t, 0, T - 1)[..., None, None]
+    k = jnp.where(valid[..., None, None],
+                  jnp.take_along_axis(k_all, idx, axis=1), 0)
+    v = jnp.where(valid[..., None, None],
+                  jnp.take_along_axis(v_all, idx, axis=1), 0)
+    return k.astype(dtype), v.astype(dtype)
+
+
+def _conv_state_at(x_pre, lengths, K):
+    """Per-row causal-conv trailing context at position ``lengths``.
+
+    x_pre: (B, T, D) pre-activation conv inputs; returns (B, K-1, D) —
+    row i holds inputs lengths[i]-K+1 .. lengths[i]-1, zero-padded on
+    the left exactly like a fresh causal conv.
+    """
+    if K <= 1:
+        return jnp.zeros_like(x_pre[:, :0])
+    xp = jnp.concatenate([jnp.zeros_like(x_pre[:, : K - 1]), x_pre], axis=1)
+    idx = lengths[:, None] + jnp.arange(K - 1)[None, :]     # (B, K-1)
+    return jnp.take_along_axis(xp, idx[..., None], axis=1)
 
 
 def _prefill_attn_layer(lp, cfg, x, *, mode, window, S, cache_dtype,
-                        enc_out=None, prefix_len=None):
+                        enc_out=None, prefix_len=None, lengths=None):
     """Dense-family layer forward that also emits its KV cache slice."""
     from repro.models.common import rope as rope_fn
     B, T, _ = x.shape
@@ -216,12 +247,15 @@ def _prefill_attn_layer(lp, cfg, x, *, mode, window, S, cache_dtype,
 
     h = apply_norm(cfg, lp["ln_mlp"], x)
     if "moe" in lp:
-        h, _ = moem.apply_moe(lp["moe"], cfg, h)
+        # pad tokens must not consume expert capacity or skew routing
+        tmask = None if lengths is None else \
+            jnp.arange(T)[None, :] < lengths[:, None]
+        h, _ = moem.apply_moe(lp["moe"], cfg, h, token_mask=tmask)
     else:
         h = mlpm.apply_mlp(lp["mlp"], cfg, h)
     x = x + h
 
-    ck, cv = _ring_fill(k, v, S, cache_dtype)
+    ck, cv = _ring_fill(k, v, S, cache_dtype, lengths)
     cache = {"k": ck, "v": cv}
     if enc_out is not None and "cross" in lp:
         ek, ev = attn._project_kv(lp["cross"], cfg, enc_out)
@@ -230,18 +264,30 @@ def _prefill_attn_layer(lp, cfg, x, *, mode, window, S, cache_dtype,
     return x, cache
 
 
-def _prefill_ssm_layer(lp, cfg, x):
+def _prefill_ssm_layer(lp, cfg, x, lengths=None):
     h = apply_norm(cfg, lp["ln"], x)
     b, T, d = h.shape
     d_in, H, P, S = ssmm._dims(cfg)
     proj = h @ lp["ssm"]["w_in"].astype(h.dtype)
     z, xs, Bm, Cm, dt_raw = ssmm._split_proj(cfg, proj)
+    xs_pre, Bm_pre, Cm_pre = xs, Bm, Cm
     xs, cx = ssmm._causal_conv(xs, lp["ssm"]["conv_x"])
     Bm, cB = ssmm._causal_conv(Bm, lp["ssm"]["conv_B"])
     Cm, cC = ssmm._causal_conv(Cm, lp["ssm"]["conv_C"])
     xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + lp["ssm"]["dt_bias"].astype(jnp.float32))
+    if lengths is not None:
+        # dt = 0 on padded steps freezes the recurrence (decay exp(0)=1,
+        # input contribution dt·B·x = 0) so h_fin is each row's state at
+        # its own last valid token — exactly like the zero-padding
+        # ssd_chunked itself applies for chunk alignment
+        keep = (jnp.arange(T)[None, :] < lengths[:, None])[..., None]
+        dt = jnp.where(keep, dt, 0.0)
+        K = cfg.ssm_conv_width
+        cx = _conv_state_at(xs_pre, lengths, K).astype(cx.dtype)
+        cB = _conv_state_at(Bm_pre, lengths, K).astype(cB.dtype)
+        cC = _conv_state_at(Cm_pre, lengths, K).astype(cC.dtype)
     A = -jnp.exp(lp["ssm"]["A_log"].astype(jnp.float32))
     y, h_fin = ssmm.ssd_chunked(xs.reshape(b, T, H, P), dt, dt * A, Bm, Cm,
                                 chunk=cfg.ssm_chunk)
@@ -254,11 +300,12 @@ def _prefill_ssm_layer(lp, cfg, x):
     return x, cache
 
 
-def _prefill_rec_layer(lp, cfg, x):
+def _prefill_rec_layer(lp, cfg, x, lengths=None):
     dt = x.dtype
     h = apply_norm(cfg, lp["ln_rec"], x)
     ga = jax.nn.gelu(h @ lp["rec"]["w_gelu"].astype(dt), approximate=True)
     xb = h @ lp["rec"]["w_rec"].astype(dt)
+    xb_pre = xb
     xb, conv_state = rgm._causal_conv(xb, lp["rec"]["conv"])
     a, beta = rgm._gates(lp["rec"], xb)
     b = beta * xb.astype(jnp.float32)
@@ -273,22 +320,40 @@ def _prefill_rec_layer(lp, cfg, x):
     x = x + y @ lp["rec"]["w_out"].astype(dt)
     x = x + mlpm.apply_mlp(lp["mlp"], cfg,
                            apply_norm(cfg, lp["ln_mlp"], x))
-    cache = {"h": hs[:, -1], "conv": conv_state}
+    if lengths is None:
+        cache = {"h": hs[:, -1], "conv": conv_state}
+    else:
+        # per-row recurrent state at each row's own last valid token
+        last = jnp.clip(lengths - 1, 0)[:, None, None]
+        h_last = jnp.take_along_axis(hs, last, axis=1)[:, 0]
+        conv = _conv_state_at(xb_pre, lengths, cfg.rglru_conv_width)
+        cache = {"h": h_last, "conv": conv.astype(conv_state.dtype)}
     return x, cache
 
 
 def prefill(p, cfg, batch, *, dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
             serve_window: int = 0, remat: bool = True,
-            cache_len: int | None = None):
+            cache_len: int | None = None, lengths=None):
     """Process the full prompt; return (last-token logits, cache, pos).
 
     batch: {"tokens": (B, T)} + frontend extras (patches/frames).
     ``cache_len``: total cache capacity to allocate (>= prompt length;
     defaults to the prompt length — pass the generation horizon).
+
+    ``lengths``: optional (B,) int32 per-request prompt lengths for
+    mixed-length batches. Prompts must then be RIGHT-padded (tokens
+    [0, lengths[i]) real, the rest pad): real queries never attend to
+    pad keys under the causal/sliding/prefix masks because every pad
+    position sorts after them, recurrent state is frozen at each row's
+    own last valid token, and pad positions never enter the KV cache.
+    The returned logits are taken at each row's last valid token and
+    ``pos`` is a per-slot (B,) vector (scalar when ``lengths`` is None).
     """
     kind = cfg.kind
     tokens = batch["tokens"]
     B, T = tokens.shape
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
     x = _embed_tokens(p, cfg, tokens, dtype)
     mode, window = "causal", 0
     if cfg.sliding_window:
@@ -324,6 +389,11 @@ def prefill(p, cfg, batch, *, dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
 
     S = cache_len_for(cfg, max(cache_len or 0, x.shape[1]), serve_window)
 
+    # valid length of the concatenated sequence (vlm prefixes count)
+    lens_x = None
+    if lengths is not None:
+        lens_x = lengths + (cfg.enc_seq_len if kind == "vlm" else 0)
+
     def run_stack(x, stacked, body):
         fn = jax.checkpoint(body) if remat else body
         return jax.lax.scan(lambda c, lp: fn(lp, c), x, stacked)
@@ -333,12 +403,13 @@ def prefill(p, cfg, batch, *, dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
             m = "prefix" if kind == "vlm" else mode
             return _prefill_attn_layer(
                 lp, cfg, xx, mode=m, window=window, S=S,
-                cache_dtype=cache_dtype)
+                cache_dtype=cache_dtype, lengths=lens_x)
         # prefix mode needs prefix_len plumbed through _mask_block;
         # handled via functools.partial on _mask defaults:
         if kind == "vlm":
             def body(lp, xx):  # noqa: F811 — vlm specialization
-                return _prefill_vlm_layer(lp, cfg, xx, prefix, S, cache_dtype)
+                return _prefill_vlm_layer(lp, cfg, xx, prefix, S,
+                                          cache_dtype, lens_x)
         x, cache = run_stack(x, p["layers"], body)
         cache = {"layers": cache}
     elif kind == "moe":
@@ -347,16 +418,16 @@ def prefill(p, cfg, batch, *, dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
             for i in range(cfg.moe_every - 1):
                 xx, caches[f"dense_{i}"] = _prefill_attn_layer(
                     lp[f"dense_{i}"], cfg, xx, mode=mode, window=window,
-                    S=S, cache_dtype=cache_dtype)
+                    S=S, cache_dtype=cache_dtype, lengths=lens_x)
             xx, caches["moe"] = _prefill_attn_layer(
                 lp["moe"], cfg, xx, mode=mode, window=window, S=S,
-                cache_dtype=cache_dtype)
+                cache_dtype=cache_dtype, lengths=lens_x)
             return xx, caches
         x, cache = run_stack(x, p["groups"], body)
         cache = {"groups": cache}
     elif kind == "ssm":
         def body(lp, xx):
-            return _prefill_ssm_layer(lp, cfg, xx)
+            return _prefill_ssm_layer(lp, cfg, xx, lens_x)
         x, cache = run_stack(x, p["layers"], body)
         cache = {"layers": cache}
     elif kind == "hybrid":
@@ -365,10 +436,11 @@ def prefill(p, cfg, batch, *, dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
             caches = {}
             for i in range(period - 1):
                 xx, caches[f"rec_{i}"] = _prefill_rec_layer(
-                    lp[f"rec_{i}"], cfg, xx)
+                    lp[f"rec_{i}"], cfg, xx, lens_x)
             xx, caches["attn"] = _prefill_attn_layer(
                 lp["attn"], cfg, xx, mode="sliding",
-                window=cfg.attention_window, S=S, cache_dtype=cache_dtype)
+                window=cfg.attention_window, S=S, cache_dtype=cache_dtype,
+                lengths=lens_x)
             return xx, caches
         cache = {}
         if "groups" in p:
@@ -376,28 +448,35 @@ def prefill(p, cfg, batch, *, dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
             cache["groups"] = gcache
         if "tail" in p:
             def tail_body(lp, xx):
-                return _prefill_rec_layer(lp, cfg, xx)
+                return _prefill_rec_layer(lp, cfg, xx, lens_x)
             x, tail_cache = run_stack(x, p["tail"], tail_body)
             cache["tail"] = tail_cache
     elif kind in ("encdec", "audio"):
         def body(lp, xx):
             return _prefill_attn_layer(lp, cfg, xx, mode="causal", window=0,
                                        S=S, cache_dtype=cache_dtype,
-                                       enc_out=enc_out)
+                                       enc_out=enc_out, lengths=lens_x)
         x, cache = run_stack(x, p["layers"], body)
         cache = {"layers": cache}
     else:
         raise ValueError(kind)
 
     x = apply_norm(cfg, p["ln_final"], x)
-    logits = _unembed(p, cfg, x[:, -1:])
-    total = T + (cfg.enc_seq_len if kind == "vlm" else 0)
-    return logits, cache, jnp.asarray(total, jnp.int32)
+    if lens_x is None:
+        logits = _unembed(p, cfg, x[:, -1:])
+        total = T + (cfg.enc_seq_len if kind == "vlm" else 0)
+        return logits, cache, jnp.asarray(total, jnp.int32)
+    # per-slot: logits at each row's last valid token, (B,) positions
+    last = jnp.clip(lens_x - 1, 0)[:, None, None]
+    x_last = jnp.take_along_axis(x, last, axis=1)           # (B, 1, d)
+    logits = _unembed(p, cfg, x_last)
+    return logits, cache, lens_x
 
 
-def _prefill_vlm_layer(lp, cfg, x, prefix, S, cache_dtype):
+def _prefill_vlm_layer(lp, cfg, x, prefix, S, cache_dtype, lengths=None):
     return _prefill_attn_layer(lp, cfg, x, mode="prefix", window=0, S=S,
-                               cache_dtype=cache_dtype, prefix_len=prefix)
+                               cache_dtype=cache_dtype, prefix_len=prefix,
+                               lengths=lengths)
 
 
 # ---------------------------------------------------------------------------
@@ -409,18 +488,24 @@ def decode_step(p, cfg, token, cache, pos, *, dtype=jnp.bfloat16,
     """One-token generation step.
 
     token: (B, 1) int32; cache: tree from init_cache_tree/prefill;
-    pos: scalar int32 absolute position. Returns (logits, new_cache).
+    pos: int32 absolute position — a scalar (all slots aligned) or a
+    ``(B,)`` vector of per-slot positions (continuous batching).
+    Returns (logits, new_cache).
     """
     kind = cfg.kind
-    x = _embed_tokens(p, cfg, token, dtype)
+    B = token.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)   # scalar or (B,): rank picks the
+    x = _embed_tokens(p, cfg, token, dtype)   # aligned vs per-slot path
     if kind in ("encdec", "audio") and not cfg.rope:
-        # sinusoidal decoder position for the current step
+        # sinusoidal decoder position for each slot's current step
         d = cfg.d_model
         half = d // 2
         freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half)
                        / max(half - 1, 1))
-        ang = pos.astype(jnp.float32) * freq
-        dpos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+        pos_b = jnp.broadcast_to(pos.reshape(-1), (B,))
+        ang = pos_b.astype(jnp.float32)[:, None] * freq     # (B, half)
+        dpos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                               axis=-1)[:, None]            # (B, 1, d)
         x = x + dpos.astype(dtype)
 
     w = effective_window(cfg, serve_window)
@@ -522,3 +607,45 @@ def decode_step(p, cfg, token, cache, pos, *, dtype=jnp.bfloat16,
     x = apply_norm(cfg, p["ln_final"], x)
     logits = _unembed(p, cfg, x)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# slot-indexed cache writes (continuous batching)
+# ---------------------------------------------------------------------------
+
+def write_cache_slot(cfg, cache, one_cache, slot, *, pos=None,
+                     one_pos=None):
+    """Write a single-request cache into slot ``slot`` of a live batch.
+
+    ``one_cache`` comes from a batch-1 :func:`prefill` with the same
+    ``cache_len``/``serve_window`` as the live ``cache`` — every leaf is
+    inserted along its ``cache_batch`` axis (located via the logical-axes
+    tree, so SSM state / conv context / cross-KV leaves, whose batch
+    axis sits at different ranks, all route correctly) with
+    ``jax.lax.dynamic_update_slice``: ``slot`` may be traced, keeping
+    one jit signature for the process lifetime.
+
+    Optionally also splices ``one_pos`` (scalar or (1,)) into the
+    per-slot ``pos`` vector. Returns ``new_cache`` (and ``new_pos``
+    when ``pos`` is given).
+    """
+    axes = cache_logical_axes_tree(cfg)
+    flat_dst, treedef = jax.tree_util.tree_flatten(cache)
+    flat_src = jax.tree_util.tree_flatten(one_cache)[0]
+    flat_ax = jax.tree_util.tree_flatten(
+        axes, is_leaf=lambda x: isinstance(x, tuple))[0]
+    assert len(flat_dst) == len(flat_src) == len(flat_ax)
+    slot = jnp.asarray(slot, jnp.int32)
+    out = []
+    for dst, src, ax in zip(flat_dst, flat_src, flat_ax):
+        b = ax.index("cache_batch")
+        start = [jnp.zeros((), jnp.int32)] * dst.ndim
+        start[b] = slot
+        out.append(jax.lax.dynamic_update_slice(
+            dst, src.astype(dst.dtype), tuple(start)))
+    new_cache = jax.tree_util.tree_unflatten(treedef, out)
+    if pos is None:
+        return new_cache
+    one_pos = jnp.asarray(one_pos, jnp.int32).reshape(())
+    new_pos = pos.at[slot].set(one_pos)
+    return new_cache, new_pos

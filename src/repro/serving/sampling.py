@@ -1,0 +1,29 @@
+"""The one token sampler shared by every serving path.
+
+Both schedulers and the serve launcher previously hand-rolled this —
+with a dtype skew: the greedy path cast to int32, the temperature path
+returned ``jax.random.categorical``'s default integer dtype, so the
+decode jit signature depended on the sampling mode. One function, one
+dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits, *, temperature: float = 0.0, key=None):
+    """Sample one token per slot from the last logit position.
+
+    logits: (B, 1, V) (or (B, V)); returns (B, 1) int32. Greedy when
+    ``temperature`` == 0, else categorical at ``temperature`` (``key``
+    required).
+    """
+    last = logits[:, -1] if logits.ndim == 3 else logits
+    if temperature > 0:
+        if key is None:
+            raise ValueError("temperature sampling requires a PRNG key")
+        tok = jax.random.categorical(key, last / temperature)
+    else:
+        tok = jnp.argmax(last, axis=-1)
+    return tok[:, None].astype(jnp.int32)

@@ -1,27 +1,36 @@
-"""Batched request scheduler: wave-based (static) batching over the
-model zoo's prefill/decode steps.
+"""Batched request schedulers over the model zoo's prefill/decode steps.
 
-Requests arrive with different prompt lengths and generation budgets;
-the scheduler packs up to `slots` of them into one fixed-shape batch
-(left-padded prompts), prefills once, and decodes the wave together,
-retiring slots as they hit their budgets; the next wave is admitted
-when the batch drains. Static shapes keep a single jit signature for
-the whole lifetime. Per-slot incremental prefill into freed slots
-(true continuous batching) is the documented upgrade path — it needs
-slot-indexed cache writes, which the ring-buffer cache layout already
-supports.
+Two admission policies, one slot-based execution model (static shapes,
+a single jit signature for the process lifetime):
+
+* :class:`BatchScheduler` — wave batching. Up to ``slots`` requests are
+  packed into one fixed-shape batch, prefilled jointly, and decoded
+  together; the next wave is admitted only when the batch drains, so
+  early-finishing slots idle until the longest request completes.
+
+* :class:`ContinuousScheduler` — continuous batching. Each slot is an
+  independent lane over one shared cache: a freed slot is immediately
+  re-prefilled (a batch-1 prefill written into the live cache along the
+  batch axis via ``write_cache_slot``) while the other slots keep
+  decoding. Per-slot ``pos`` vectors carry each lane's absolute
+  position through ``decode_step``.
+
+Both right-pad prompts to ``max_prompt`` and pass per-request
+``lengths`` to prefill, so padded prefixes never enter attention and
+per-request generation budgets are enforced without any per-step
+host sync.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import ModelApi
+from repro.serving.sampling import sample_tokens
 
 
 @dataclass
@@ -31,6 +40,7 @@ class Request:
     max_new: int = 16
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    budget: int = 0                 # set at admission
 
 
 @dataclass
@@ -39,14 +49,26 @@ class SchedulerStats:
     decode_steps: int = 0
     tokens_generated: int = 0
     requests_done: int = 0
+    slot_steps: int = 0             # slots * decode_steps
+    live_slot_steps: int = 0        # slots actually generating
+
+    @property
+    def utilization(self) -> float:
+        return self.live_slot_steps / max(self.slot_steps, 1)
 
 
-class BatchScheduler:
-    """Slot-based wave batching (static shapes, shared pos)."""
+class _SchedulerBase:
+    """Shared request plumbing: queue, slots, padding, sampling."""
 
     def __init__(self, model: ModelApi, *, slots: int = 4,
                  max_prompt: int = 64, max_total: int = 128,
                  temperature: float = 0.0, seed: int = 0):
+        assert max_prompt <= max_total
+        if model.cfg.kind in ("vlm", "encdec", "audio"):
+            raise ValueError(
+                f"{type(self).__name__} serves token-only requests; "
+                f"arch kind {model.cfg.kind!r} needs frontend inputs "
+                "(patches/frames) that Request does not carry")
         self.model = model
         self.slots = slots
         self.max_prompt = max_prompt
@@ -56,88 +78,244 @@ class BatchScheduler:
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
         self.stats = SchedulerStats()
-        self._prefill = jax.jit(lambda p, b: model.prefill(
+
+    def submit(self, req: Request) -> None:
+        assert 1 <= len(req.prompt) <= self.max_prompt
+        self.queue.append(req)
+
+    @property
+    def outstanding(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.active)
+
+    def _budget(self, req: Request) -> int:
+        # the cache holds prompt + generated tokens: never decode past it
+        return min(req.max_new, self.max_total - len(req.prompt))
+
+    def _take_next(self) -> Optional[Request]:
+        """Pop the next admissible request; zero-budget requests (prompt
+        already fills the cache) complete immediately with no tokens."""
+        while self.queue:
+            req = self.queue.pop(0)
+            req.budget = self._budget(req)
+            if req.budget > 0:
+                return req
+            req.done = True
+            self.stats.requests_done += 1
+        return None
+
+    def _sample(self, logits) -> jnp.ndarray:
+        k = None
+        if self.temperature > 0:
+            self.key, k = jax.random.split(self.key)
+        return sample_tokens(logits, temperature=self.temperature, key=k)
+
+    def _emit(self, tok_np) -> int:
+        """Append sampled tokens to live requests; retire exhausted ones."""
+        emitted = 0
+        for i, r in enumerate(self.active):
+            if r is None or r.done:
+                continue
+            r.out_tokens.append(int(tok_np[i]))
+            emitted += 1
+            if len(r.out_tokens) >= r.budget:
+                r.done = True
+                self.stats.requests_done += 1
+                self.active[i] = None
+        self.stats.tokens_generated += emitted
+        return emitted
+
+    def _decode_tick(self, params) -> int:
+        """Sample from the held logits, emit/retire, then decode the
+        batch one step (skipped when every lane just retired — the
+        final tokens need no decode)."""
+        tok = self._sample(self._last_logits)
+        emitted = self._emit(np.asarray(tok)[:, 0])
+        if not any(r is not None for r in self.active):
+            return emitted
+        self._last_logits, self._cache = self._decode(
+            params, tok, self._cache, self._pos)
+        self._pos = self._pos + 1
+        self.stats.decode_steps += 1
+        self.stats.slot_steps += self.slots
+        self.stats.live_slot_steps += sum(
+            r is not None for r in self.active)
+        return emitted
+
+    def run(self, params, max_steps: int = 1000) -> SchedulerStats:
+        steps = 0
+        while self.outstanding and steps < max_steps:
+            if self.step(params) == 0 and not self.queue:
+                break
+            steps += 1
+        if self.outstanding:
+            import warnings
+            warnings.warn(
+                f"{type(self).__name__}.run hit max_steps={max_steps} "
+                "with requests still outstanding — results are "
+                "truncated; raise max_steps", RuntimeWarning,
+                stacklevel=2)
+        return self.stats
+
+
+class BatchScheduler(_SchedulerBase):
+    """Slot-based wave batching (static shapes, per-slot pos)."""
+
+    def __init__(self, model: ModelApi, *, slots: int = 4,
+                 max_prompt: int = 64, max_total: int = 128,
+                 temperature: float = 0.0, seed: int = 0):
+        super().__init__(model, slots=slots, max_prompt=max_prompt,
+                         max_total=max_total, temperature=temperature,
+                         seed=seed)
+        self._prefill = jax.jit(lambda p, b, l: model.prefill(
             p, b, dtype=jnp.float32, cache_dtype=jnp.float32,
-            cache_len=max_total))
+            cache_len=max_total, lengths=l))
         self._decode = jax.jit(lambda p, t, c, s: model.decode_step(
             p, t, c, s, dtype=jnp.float32))
         self._cache = None
         self._pos = None            # (slots,) per-slot absolute position
         self._last_logits = None
 
-    def submit(self, req: Request) -> None:
-        assert len(req.prompt) <= self.max_prompt
-        self.queue.append(req)
-
     # ------------------------------------------------------------------
     def _admit(self, params) -> bool:
-        """Fill free slots from the queue and (re)prefill the batch.
+        """Fill free slots from the queue and prefill the wave jointly.
 
-        Simplification: a joint prefill re-encodes all active prompts
-        (cheap at these sizes; per-slot incremental prefill is the
-        production upgrade path)."""
+        Prompts are RIGHT-padded to ``max_prompt`` (one prefill jit
+        signature for the process lifetime) with per-request ``lengths``
+        so padded tails never enter attention or the cache."""
         free = [i for i, r in enumerate(self.active) if r is None]
         if not free or not self.queue:
             return False
         for i in free:
-            if not self.queue:
+            req = self._take_next()
+            if req is None:
                 break
-            self.active[i] = self.queue.pop(0)
-        live = [r for r in self.active if r is not None]
-        if not live:
+            self.active[i] = req
+        if not any(r is not None for r in self.active):
             return False
-        # right-align prompts into a common length (left-pad with 0)
-        L = max(len(r.prompt) for r in live)
-        toks = np.zeros((self.slots, L), np.int32)
+        toks = np.zeros((self.slots, self.max_prompt), np.int32)
+        lens = np.zeros((self.slots,), np.int32)
         for i, r in enumerate(self.active):
             if r is not None:
-                toks[i, L - len(r.prompt):] = r.prompt
-        logits, cache, pos = self._prefill(params,
-                                           {"tokens": jnp.asarray(toks)})
+                toks[i, : len(r.prompt)] = r.prompt
+                lens[i] = len(r.prompt)
+        logits, cache, pos = self._prefill(
+            params, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens))
         self._cache = cache
-        self._pos = jnp.full((), int(pos), jnp.int32)
+        self._pos = pos             # (slots,) = per-request prompt length
         self._last_logits = logits
         self.stats.prefills += 1
         return True
-
-    def _sample(self, logits) -> jnp.ndarray:
-        if self.temperature > 0:
-            self.key, k = jax.random.split(self.key)
-            return jax.random.categorical(
-                k, logits[:, -1] / self.temperature)[:, None]
-        return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
 
     def step(self, params) -> int:
         """One decode step for all live slots; returns #tokens emitted."""
         if self._cache is None and not self._admit(params):
             return 0
-        tok = self._sample(self._last_logits)
-        self._last_logits, self._cache = self._decode(
-            params, tok, self._cache, self._pos)
-        self._pos = self._pos + 1
-        self.stats.decode_steps += 1
-        emitted = 0
-        tok_np = np.asarray(tok)[:, 0]
-        for i, r in enumerate(self.active):
-            if r is None or r.done:
-                continue
-            r.out_tokens.append(int(tok_np[i]))
-            emitted += 1
-            if len(r.out_tokens) >= r.max_new or \
-                    int(self._pos) >= self.max_total:
-                r.done = True
-                self.stats.requests_done += 1
-                self.active[i] = None
-        self.stats.tokens_generated += emitted
-        # batch drained -> allow the next admission wave
-        if all(r is None for r in self.active):
-            self._cache = None
+        emitted = self._decode_tick(params)
+        if not any(r is not None for r in self.active):
+            self._cache = None  # drained -> allow the next admission wave
         return emitted
 
-    def run(self, params, max_steps: int = 1000) -> SchedulerStats:
-        steps = 0
-        while (self.queue or any(self.active)) and steps < max_steps:
-            if self.step(params) == 0 and not self.queue:
+
+class ContinuousScheduler(_SchedulerBase):
+    """Per-slot admission/retirement without draining the batch.
+
+    The cache for all ``slots`` lanes is allocated once; a freed slot is
+    refilled by a batch-1 prefill spliced in along the batch axis
+    (``jax.lax.dynamic_update_slice`` with a *traced* slot index), so
+    admission, like decode, has a single jit signature for the process
+    lifetime."""
+
+    def __init__(self, model: ModelApi, *, slots: int = 4,
+                 max_prompt: int = 64, max_total: int = 128,
+                 temperature: float = 0.0, seed: int = 0):
+        super().__init__(model, slots=slots, max_prompt=max_prompt,
+                         max_total=max_total, temperature=temperature,
+                         seed=seed)
+        cfg = model.cfg
+        self._cache = model.init_cache(slots, max_total, jnp.float32)
+        self._pos = jnp.zeros((slots,), jnp.int32)
+        self._last_logits = jnp.zeros((slots, 1, cfg.vocab_size),
+                                      jnp.float32)
+
+        def _admit_fn(params, cache, pos, logits, tokens, length, slot):
+            lg1, c1, p1 = model.prefill(
+                params, {"tokens": tokens}, dtype=jnp.float32,
+                cache_dtype=jnp.float32, cache_len=max_total,
+                lengths=length)
+            cache, pos = model.write_cache_slot(cache, c1, slot, pos=pos,
+                                                one_pos=p1[0])
+            logits = jax.lax.dynamic_update_slice(logits, lg1, (slot, 0, 0))
+            return cache, pos, logits
+
+        self._admit_one = jax.jit(_admit_fn)
+        self._decode = jax.jit(lambda p, t, c, s: model.decode_step(
+            p, t, c, s, dtype=jnp.float32))
+
+    # ------------------------------------------------------------------
+    def _admit(self, params) -> int:
+        """Prefill queued requests into every free slot; others keep
+        their cache/pos untouched."""
+        admitted = 0
+        for i, r in enumerate(self.active):
+            if r is not None or not self.queue:
+                continue
+            req = self._take_next()
+            if req is None:
                 break
-            steps += 1
-        return self.stats
+            self.active[i] = req
+            toks = np.zeros((1, self.max_prompt), np.int32)
+            toks[0, : len(req.prompt)] = req.prompt
+            self._cache, self._pos, self._last_logits = self._admit_one(
+                params, self._cache, self._pos, self._last_logits,
+                jnp.asarray(toks),
+                jnp.asarray([len(req.prompt)], jnp.int32),
+                jnp.asarray(i, jnp.int32))
+            self.stats.prefills += 1
+            admitted += 1
+        return admitted
+
+    def step(self, params) -> int:
+        """Admit into free slots, then one decode step for the batch."""
+        self._admit(params)
+        if not any(r is not None for r in self.active):
+            return 0
+        return self._decode_tick(params)
+
+
+SCHEDULERS = {"wave": BatchScheduler, "continuous": ContinuousScheduler}
+
+
+def make_scheduler(kind: str, model: ModelApi, **kw):
+    try:
+        cls = SCHEDULERS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {kind!r}; choose from {sorted(SCHEDULERS)}")
+    return cls(model, **kw)
+
+
+def run_trace(sched, params, arrivals, max_steps: int = 10_000):
+    """Drive a scheduler through an arrival trace.
+
+    arrivals: iterable of ``(arrive_step, Request)`` — each request is
+    submitted once the driver's step counter reaches ``arrive_step``
+    (steps advance even while the scheduler idles waiting for work, so
+    a bursty Poisson trace exercises admission under load). Returns the
+    scheduler's stats.
+    """
+    pending = sorted(arrivals, key=lambda a: a[0])
+    i = 0
+    steps = 0
+    while (i < len(pending) or sched.outstanding) and steps < max_steps:
+        while i < len(pending) and pending[i][0] <= steps:
+            sched.submit(pending[i][1])
+            i += 1
+        sched.step(params)
+        steps += 1
+    if i < len(pending) or sched.outstanding:
+        import warnings
+        warnings.warn(
+            f"run_trace hit max_steps={max_steps} with requests still "
+            "outstanding — results are truncated; raise max_steps",
+            RuntimeWarning, stacklevel=2)
+    return sched.stats

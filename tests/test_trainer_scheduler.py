@@ -93,3 +93,178 @@ def test_scheduler_greedy_matches_direct_decode(tiny_cfg):
                                       dtype=jnp.float32)
         pos = pos + 1
     assert req.out_tokens == outs
+
+
+# ---------------------------------------------------------------------------
+# mixed-length waves, per-slot retirement, continuous batching
+# ---------------------------------------------------------------------------
+
+def _solo_greedy(model, params, prompt, n, max_total=32):
+    lg, cache, pos = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, dtype=jnp.float32,
+        cache_dtype=jnp.float32, cache_len=max_total)
+    outs = []
+    for _ in range(n):
+        tok = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        outs.append(int(tok[0, 0]))
+        lg, cache = model.decode_step(params, tok, cache, pos,
+                                      dtype=jnp.float32)
+        pos = pos + 1
+    return outs
+
+
+def test_wave_mixed_lengths_match_solo(tiny_cfg):
+    """The wave-prefill padding bugfix: short prompts batched with long
+    ones must produce exactly their solo greedy continuations."""
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 250, size=n).astype(np.int32)
+               for n in (4, 9, 13)]
+    sched = BatchScheduler(model, slots=3, max_prompt=16, max_total=32)
+    reqs = [Request(rid=i, prompt=p, max_new=5)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        sched.submit(r)
+    sched.run(params)
+    for r in reqs:
+        assert r.out_tokens == _solo_greedy(model, params, r.prompt, 5), \
+            f"request {r.rid} diverged from its solo decode"
+
+
+def test_wave_no_shared_pos_early_retirement(tiny_cfg):
+    """The shared-pos bugfix: a short prompt batched with a long one
+    gets its full max_new budget (previously it was retired when the
+    shared absolute position hit max_total)."""
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    short = np.arange(1, 4, dtype=np.int32)           # 3 tokens
+    long = np.arange(1, 15, dtype=np.int32)           # 14 tokens
+    sched = BatchScheduler(model, slots=2, max_prompt=14, max_total=20)
+    reqs = [Request(rid=0, prompt=short, max_new=8),
+            Request(rid=1, prompt=long, max_new=6)]
+    for r in reqs:
+        sched.submit(r)
+    sched.run(params)
+    # short request: 8 tokens (old scheduler stopped at 20 - 14 = 6);
+    # long request: min(6, 20 - 14) = 6 tokens
+    assert len(reqs[0].out_tokens) == 8
+    assert len(reqs[1].out_tokens) == 6
+    assert reqs[0].out_tokens == _solo_greedy(model, params, short, 8,
+                                              max_total=20)
+
+
+def test_continuous_matches_wave_and_solo(tiny_cfg):
+    """Both schedulers emit identical greedy tokens per request, each
+    equal to the request's solo decode."""
+    from repro.serving.scheduler import ContinuousScheduler
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    protos = [(rng.integers(1, 250, size=int(rng.integers(3, 13))
+                            ).astype(np.int32), int(rng.integers(3, 7)))
+              for _ in range(6)]
+    outs = {}
+    for cls in (BatchScheduler, ContinuousScheduler):
+        sched = cls(model, slots=2, max_prompt=16, max_total=32)
+        reqs = [Request(rid=i, prompt=p, max_new=n)
+                for i, (p, n) in enumerate(protos)]
+        for r in reqs:
+            sched.submit(r)
+        stats = sched.run(params)
+        assert stats.requests_done == len(protos)
+        outs[cls.__name__] = {r.rid: r.out_tokens for r in reqs}
+    assert outs["BatchScheduler"] == outs["ContinuousScheduler"]
+    for (p, n), (rid, toks) in zip(protos,
+                                   sorted(outs["BatchScheduler"].items())):
+        assert toks == _solo_greedy(model, params, p, n)
+
+
+def test_continuous_staggered_admission_beats_wave(tiny_cfg):
+    """Heterogeneous budgets: the continuous scheduler refills retired
+    slots mid-flight (prefills > waves, decode steps strictly fewer,
+    higher utilization), still bit-equal to solo decode."""
+    from repro.serving.scheduler import ContinuousScheduler
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    # alternating tiny/large budgets force wave slots to idle
+    protos = [(rng.integers(1, 250, size=6).astype(np.int32),
+               2 if i % 2 else 10) for i in range(6)]
+
+    def run(cls):
+        sched = cls(model, slots=2, max_prompt=8, max_total=32)
+        reqs = [Request(rid=i, prompt=p, max_new=n)
+                for i, (p, n) in enumerate(protos)]
+        for r in reqs:
+            sched.submit(r)
+        return sched.run(params), reqs
+
+    wave_stats, _ = run(BatchScheduler)
+    cont_stats, cont_reqs = run(ContinuousScheduler)
+    assert cont_stats.requests_done == len(protos)
+    assert cont_stats.prefills == len(protos)      # one per admission
+    assert cont_stats.decode_steps < wave_stats.decode_steps
+    assert cont_stats.utilization > wave_stats.utilization
+    for r in cont_reqs:
+        assert r.out_tokens == _solo_greedy(model, params, r.prompt,
+                                            r.max_new)
+
+
+def test_sample_tokens_dtype_stable(tiny_cfg):
+    """The shared sampler returns int32 on BOTH paths (the temperature
+    path previously leaked categorical's default integer dtype into the
+    decode jit signature)."""
+    from repro.serving.sampling import sample_tokens
+    logits = jnp.zeros((2, 1, 16), jnp.float32)
+    greedy = sample_tokens(logits)
+    temp = sample_tokens(logits, temperature=0.7,
+                         key=jax.random.PRNGKey(0))
+    assert greedy.dtype == jnp.int32 and greedy.shape == (2, 1)
+    assert temp.dtype == jnp.int32 and temp.shape == (2, 1)
+    with pytest.raises(ValueError):
+        sample_tokens(logits, temperature=0.5)
+
+
+def test_scheduler_single_jit_signature(tiny_cfg):
+    """Mixed prompt lengths across waves reuse ONE prefill/decode trace
+    (prompts are padded to max_prompt with a lengths vector)."""
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = BatchScheduler(model, slots=2, max_prompt=16, max_total=32)
+    rng = np.random.default_rng(6)
+    for rid in range(4):
+        sched.submit(Request(rid=rid,
+                             prompt=rng.integers(
+                                 1, 250, size=rng.integers(2, 16)
+                             ).astype(np.int32), max_new=3))
+    sched.run(params)
+    assert sched.stats.prefills >= 2                # several waves ran
+    assert sched._prefill._cache_size() == 1        # one trace
+    assert sched._decode._cache_size() == 1
+
+
+def test_zero_budget_request_emits_nothing(tiny_cfg):
+    """A prompt that already fills the cache (budget 0) completes with
+    zero tokens instead of leaking one, in both schedulers; run() warns
+    instead of silently truncating at max_steps."""
+    from repro.serving.scheduler import ContinuousScheduler
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    full = np.arange(1, 17, dtype=np.int32)            # 16 == max_total
+    short = np.arange(1, 5, dtype=np.int32)
+    for cls in (BatchScheduler, ContinuousScheduler):
+        sched = cls(model, slots=2, max_prompt=16, max_total=16)
+        reqs = [Request(rid=0, prompt=full, max_new=4),
+                Request(rid=1, prompt=short, max_new=4)]
+        for r in reqs:
+            sched.submit(r)
+        stats = sched.run(params)
+        assert reqs[0].done and reqs[0].out_tokens == []
+        assert len(reqs[1].out_tokens) == 4
+        assert stats.requests_done == 2
+
+    sched = BatchScheduler(model, slots=1, max_prompt=8, max_total=16)
+    sched.submit(Request(rid=0, prompt=short, max_new=8))
+    with pytest.warns(RuntimeWarning, match="max_steps"):
+        sched.run(params, max_steps=2)
