@@ -42,13 +42,16 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import TopologyConfig
 from repro.core.mixing import MixingPlan, build_mixing_plan
 from repro.core.topology import Network, build_network
 from repro.dist.sharding import drop_hint_axes
+from repro.hierarchy.aggregate import apply_device_matrix_pytree
 from repro.models.registry import ModelApi
+from repro.netsim.faults import weighted_global_pytree
 
 
 @dataclass(frozen=True)
@@ -130,7 +133,6 @@ def weighted_aggregation(params, net: Network, weights: jax.Array):
     physical shards — scale-mode churn shapes the sync pattern, not the
     broadcast); an all-dark event (weights sum to 0) is the identity.
     """
-    from repro.netsim.faults import weighted_global_pytree
     g = weighted_global_pytree(params, weights, net.num_clusters)
     alive = weights.sum() > 0
 
@@ -156,16 +158,161 @@ def full_aggregation(params, net: Network):
 
 
 # ---------------------------------------------------------------------------
+# the flattened replica buffer of the fused interval (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+LANE = 128      # TPU lane width — the flat buffer is lane-padded once
+
+
+@dataclass(frozen=True)
+class FlatParamSpec:
+    """Layout of the lane-padded flat ``(R, P)`` replica buffer.
+
+    The fused interval (``make_tthf_train_step(fused_interval=True)``)
+    carries every replica's parameters as ONE ``(R, P)`` array: leaves
+    packed back-to-back along P (per-replica layout — shapes here
+    exclude the leading replica axis), P padded up to a lane multiple
+    exactly once at build time. SGD updates and consensus mixing then
+    run as single whole-buffer ops instead of per-leaf launches;
+    :meth:`unflatten` is only needed at aggregation/eval boundaries and
+    is a pure view (slice + reshape, no copy).
+
+    Mixing/aggregation correctness under padding: every interval op is
+    per-column linear over the replica axis, so the zero pad columns
+    stay zero and real columns are untouched by the packing.
+    """
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    offsets: tuple[int, ...]
+    sizes: tuple[int, ...]
+    dtype: Any
+    total: int          # packed length (sum of leaf sizes)
+    padded: int         # lane-padded P
+
+    @classmethod
+    def for_tree(cls, tree) -> "FlatParamSpec":
+        """Build from a per-replica pytree of arrays/ShapeDtypeStructs
+        (leaf shapes WITHOUT the replica axis)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        assert leaves, "empty parameter pytree"
+        dtypes = {jnp.dtype(l.dtype) for l in leaves}
+        assert len(dtypes) == 1, \
+            f"flat buffer needs a uniform param dtype, got {dtypes}"
+        shapes = tuple(tuple(int(d) for d in l.shape) for l in leaves)
+        sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+        offsets = tuple(int(o) for o in
+                        np.concatenate([[0], np.cumsum(sizes)[:-1]]))
+        total = int(sum(sizes))
+        padded = -(-total // LANE) * LANE
+        return cls(treedef=treedef, shapes=shapes, offsets=offsets,
+                   sizes=sizes, dtype=dtypes.pop(), total=total,
+                   padded=padded)
+
+    @classmethod
+    def for_model(cls, model: ModelApi, dtype=jnp.float32) -> "FlatParamSpec":
+        p_abs, _ = model.abstract_params(dtype=dtype)
+        return cls.for_tree(p_abs)
+
+    # -- conversions ----------------------------------------------------
+    def flatten(self, tree) -> jax.Array:
+        """Replicated pytree (leaves (R, *shape)) -> flat (R, P).
+
+        Leaves are cast to the spec dtype (the reference microstep's
+        ``g.astype(w.dtype)`` contract for gradient trees)."""
+        leaves = jax.tree.flatten(tree)[0]
+        R = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [l.astype(self.dtype).reshape(R, -1) for l in leaves], axis=1)
+        if self.padded != self.total:
+            flat = jnp.pad(flat, ((0, 0), (0, self.padded - self.total)))
+        return flat
+
+    def unflatten(self, flat: jax.Array):
+        """Flat (R, P) -> replicated pytree (leaves (R, *shape))."""
+        R = flat.shape[0]
+        leaves = [flat[:, o:o + n].reshape((R,) + s)
+                  for o, n, s in zip(self.offsets, self.sizes, self.shapes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def unflatten_one(self, row: jax.Array):
+        """One replica's row (P,) -> per-replica pytree (leaves shape)."""
+        leaves = [row[o:o + n].reshape(s)
+                  for o, n, s in zip(self.offsets, self.sizes, self.shapes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def abstract(self, replicas: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((replicas, self.padded), self.dtype)
+
+
+# flat (R, P) counterparts of the pytree aggregations above — the same
+# per-column linear maps, so fused-interval trajectories are bitwise the
+# reference path's (asserted in tests/test_fused_interval.py)
+
+def sampled_aggregation_flat(flat: jax.Array, net: Network,
+                             picks: jax.Array) -> jax.Array:
+    varrho = jnp.asarray(net.varrho, jnp.float32)
+    N, s = net.num_clusters, net.cluster_size
+    R, P = flat.shape
+    z = flat.reshape(N, s, P)
+    chosen = jnp.take_along_axis(
+        z, picks[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    w_hat = jnp.einsum("c,cm->m", varrho.astype(flat.dtype), chosen)
+    return jnp.broadcast_to(w_hat[None], (R, P))
+
+
+def weighted_aggregation_flat(flat: jax.Array, net: Network,
+                              weights: jax.Array) -> jax.Array:
+    N, s = net.num_clusters, net.cluster_size
+    R, P = flat.shape
+    g = jnp.einsum("cs,csm->m", weights.astype(flat.dtype),
+                   flat.reshape(N, s, P))
+    alive = weights.sum() > 0
+    return jnp.where(alive, jnp.broadcast_to(g[None], (R, P)), flat)
+
+
+def full_aggregation_flat(flat: jax.Array, net: Network) -> jax.Array:
+    varrho = jnp.asarray(net.varrho, jnp.float32)
+    N, s = net.num_clusters, net.cluster_size
+    R, P = flat.shape
+    z = flat.reshape(N, s, P).mean(axis=1)
+    w_hat = jnp.einsum("c,cm->m", varrho.astype(flat.dtype), z)
+    return jnp.broadcast_to(w_hat[None], (R, P))
+
+
+def apply_device_matrix_flat(flat: jax.Array, M: jax.Array) -> jax.Array:
+    return jnp.einsum("ij,jm->im", M.astype(flat.dtype), flat,
+                      preferred_element_type=flat.dtype)
+
+
+# ---------------------------------------------------------------------------
 # the TT-HF interval step
 # ---------------------------------------------------------------------------
 
 def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
                          dtype=jnp.bfloat16, remat: bool = True,
                          sync: str = "tthf", refreshable: bool = False,
-                         hierarchy=None):
+                         hierarchy=None, fused_interval: bool = False,
+                         fused_kernel: Optional[bool] = None,
+                         param_dtype=jnp.float32):
     """Returns step(params_R, batch, agg, step_idx, ...) -> (params_R, loss).
 
     params_R: every leaf has leading replica axis R.
+
+    ``fused_interval=True`` builds the flat-buffer variant (DESIGN.md
+    §12): the step carries parameters as ONE lane-padded ``(R, P)``
+    array (:class:`FlatParamSpec`; the returned ``step`` exposes it as
+    ``step.spec``), SGD updates and consensus mixing run as whole-buffer
+    ops instead of per-leaf launches, and each consensus block's last
+    SGD update fuses with the ``W = V^Gamma`` mixing product — one
+    read-w/read-g/write-mixed-w parameter-stream pass
+    (:mod:`repro.kernels.fused_consensus_sgd`) instead of two.
+    Trajectories are BITWISE the reference path's in f32
+    (``tests/test_fused_interval.py``). ``fused_kernel`` forces the
+    Pallas kernel on/off for that fused block-end (None = auto: kernel
+    on real TPUs, the identical-math XLA einsum off-TPU);
+    ``param_dtype`` fixes the buffer dtype. Only the ``fused_power``
+    ("fused") consensus backend fuses; other backends keep their exact
+    per-event semantics on the flat buffer.
     batch: {"tokens": (tau, R, b, T), "labels": ...} — one aggregation
     interval's worth of microbatches.
     sync: "tthf" (Algorithm 1) | "star" (FedAvg: full participation,
@@ -249,6 +396,13 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
                                    scale.sample_per_cluster > 1)
                 else "picks")
 
+    if fused_interval:
+        return _make_fused_interval_step(
+            model, scale, net=net, plan=plan, sync=sync,
+            refreshable=refreshable, agg_kind=agg_kind,
+            n_blocks=n_blocks, replica_loss=replica_loss,
+            fused_kernel=fused_kernel, param_dtype=param_dtype)
+
     def interval(params, batch, agg, mix_refresh):
         lr = jnp.asarray(scale.lr, jnp.float32)
         # (tau, R, b, T) -> (blocks, consensus_every, R, b, T)
@@ -272,8 +426,6 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
             elif agg_kind == "weights":
                 params = weighted_aggregation(params, net, agg)
             else:
-                from repro.hierarchy.aggregate import \
-                    apply_device_matrix_pytree
                 params = apply_device_matrix_pytree(params, agg)
         elif sync == "star":
             params = full_aggregation(params, net)
@@ -286,6 +438,136 @@ def make_tthf_train_step(model: ModelApi, scale: TTHFScaleConfig, *,
         def step(params, batch, agg, step_idx):
             return interval(params, batch, agg, None)
 
+    return step, net
+
+
+def _make_fused_interval_step(model: ModelApi, scale: TTHFScaleConfig, *,
+                              net: Network, plan: Optional[MixingPlan],
+                              sync: str, refreshable: bool, agg_kind: str,
+                              n_blocks: int, replica_loss,
+                              fused_kernel: Optional[bool],
+                              param_dtype) -> tuple[Any, Network]:
+    """The ``fused_interval=True`` build — see ``make_tthf_train_step``.
+
+    Arithmetic mirrors the reference interval exactly: grads come from
+    the identical unflattened tree, the SGD update is the same
+    elementwise expression on the concatenated buffer, and every
+    mixing/aggregation einsum is per-column identical to its per-leaf
+    counterpart — so fused and reference trajectories are bitwise equal
+    in f32 (asserted in tests and in ``benchmarks/scale_sync.py``).
+    """
+    spec = FlatParamSpec.for_model(model, dtype=param_dtype)
+    N, s = net.num_clusters, net.cluster_size
+    if fused_kernel is None:
+        from repro.kernels.runtime import default_interpret
+        # auto: Mosaic kernel on real TPUs; off-TPU the XLA einsum below
+        # IS the fused pass after fusion, and skipping pallas interpret
+        # overhead keeps the CPU path fast
+        fused_kernel = not default_interpret()
+    if fused_kernel:
+        from repro.kernels.fused_consensus_sgd import (
+            fused_consensus_sgd as _fused_kernel_fn)
+
+    def grad_flat(flat, mb):
+        """Mean loss + flat (R, P) grads; pad columns stay zero."""
+        losses, grads = jax.vmap(
+            lambda p, m: jax.value_and_grad(replica_loss)(p, m)
+        )(spec.unflatten(flat), mb)
+        return spec.flatten(grads), jnp.mean(losses)
+
+    def interval(flat, batch, agg, mix_refresh):
+        lr = jnp.asarray(scale.lr, jnp.float32)
+        mix_active = plan is not None and not (plan.is_noop and
+                                               mix_refresh is None)
+
+        def resh(x):
+            return x.reshape((n_blocks, scale.consensus_every) + x.shape[1:])
+        batch_b = jax.tree.map(resh, batch)
+
+        def sgd(flat, mb):
+            """One microstep on the flat carrier — bitwise-critical.
+
+            The update runs in the PYTREE domain and the updated tree
+            reflattens (a concat XLA fuses into the update writes, so
+            the carry stays one buffer with no extra HBM pass).
+            Updating the flat buffer directly against flattened GRADS
+            instead fuses the concat into the grad epilogue and
+            re-vectorizes it — a 1-ulp drift vs the reference step on
+            non-lane-aligned models.
+            """
+            params = spec.unflatten(flat)
+            losses, grads = jax.vmap(
+                lambda p, m: jax.value_and_grad(replica_loss)(p, m)
+            )(params, mb)
+            params = jax.tree.map(
+                lambda w, g: w - jnp.asarray(lr, w.dtype)
+                * g.astype(w.dtype), params, grads)
+            return spec.flatten(params), jnp.mean(losses)
+
+        # W available => the block-end collapses to ONE matrix product
+        W0 = plan.fused_w(mix_refresh) if mix_active else None
+        kernel_end = fused_kernel and mix_active and W0 is not None
+
+        def block(flat, block_batch):
+            if kernel_end:
+                # Pallas path: the LAST microstep's SGD update fuses
+                # with the mixing product — one read-w/read-g/
+                # write-mixed-w HBM pass (repro.kernels.
+                # fused_consensus_sgd). The inline last-step grad can
+                # re-vectorize vs the in-scan instance, so this path
+                # carries the kernel tolerance contract, not the
+                # bitwise one (it is auto-selected on TPUs only).
+                head = jax.tree.map(lambda x: x[:-1], block_batch)
+                last = jax.tree.map(lambda x: x[-1], block_batch)
+                flat, head_losses = jax.lax.scan(sgd, flat, head)
+                g, last_loss = grad_flat(flat, last)
+                flat = _fused_kernel_fn(
+                    flat.reshape(N, s, -1), g.reshape(N, s, -1),
+                    W0, lr).reshape(flat.shape)
+                losses = jnp.concatenate([head_losses, last_loss[None]])
+                return flat, jnp.mean(losses)
+            # XLA path — bitwise contract: the microstep scan matches
+            # the reference structure exactly (splitting the last step
+            # out of the scan compiles its grad graph in a different
+            # fusion context — a 1-ulp drift on non-lane-aligned
+            # models), then the block-end applies as ONE whole-buffer
+            # op instead of per-leaf launches
+            flat, losses = jax.lax.scan(sgd, flat, block_batch)
+            if mix_active:
+                if W0 is not None:
+                    flat = jnp.einsum(
+                        "nij,njm->nim", W0.astype(flat.dtype),
+                        flat.reshape(N, s, -1),
+                        preferred_element_type=flat.dtype
+                    ).reshape(flat.shape)
+                else:
+                    # non-fused_power backend: exact per-event
+                    # semantics on the flat buffer
+                    flat = plan.apply(flat.reshape(N, s, -1),
+                                      refresh=mix_refresh
+                                      ).reshape(flat.shape)
+            return flat, jnp.mean(losses)
+
+        flat, block_losses = jax.lax.scan(block, flat, batch_b)
+        if sync == "tthf":
+            if agg_kind == "picks":
+                flat = sampled_aggregation_flat(flat, net, agg)
+            elif agg_kind == "weights":
+                flat = weighted_aggregation_flat(flat, net, agg)
+            else:
+                flat = apply_device_matrix_flat(flat, agg)
+        elif sync == "star":
+            flat = full_aggregation_flat(flat, net)
+        return flat, jnp.mean(block_losses)
+
+    if refreshable:
+        def step(flat, batch, agg, step_idx, mix_refresh):
+            return interval(flat, batch, agg, mix_refresh)
+    else:
+        def step(flat, batch, agg, step_idx):
+            return interval(flat, batch, agg, None)
+
+    step.spec = spec
     return step, net
 
 

@@ -256,6 +256,19 @@ class MixingPlan:
         V, W = self._matrices(refresh)
         return mix(z, V, self.gamma, backend=self.backend, W=W)
 
+    def fused_w(self, refresh: Optional[jax.Array] = None
+                ) -> Optional[jax.Array]:
+        """The stacked (N, s, s) powers if this plan applies as ONE
+        matrix product (``fused_power`` backend), else None.
+
+        The fused-interval step (``core/distributed.py``) uses this to
+        route block-ends through the fused SGD+mix kernel; other
+        backends fall back to :meth:`apply`.
+        """
+        if self.backend != "fused_power":
+            return None
+        return self._matrices(refresh)[1]
+
     def apply_pytree(self, params, refresh: Optional[jax.Array] = None):
         """params: pytree with leading replica/device axis I = N*s."""
         if self.is_noop and refresh is None:

@@ -17,11 +17,14 @@ accumulates in fp32 via preferred_element_type regardless of z dtype.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
 
 
 def _kernel(gamma_ref, z_ref, v_ref, o_ref):
@@ -39,8 +42,12 @@ def _kernel(gamma_ref, z_ref, v_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("blk_m", "interpret"))
 def consensus_mix(z: jax.Array, V: jax.Array, gamma: jax.Array,
-                  blk_m: int = 512, interpret: bool = True) -> jax.Array:
-    """z: (N, s, M), V: (N, s, s), gamma: (N,) int32."""
+                  blk_m: int = 512,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """z: (N, s, M), V: (N, s, s), gamma: (N,) int32.
+
+    ``interpret=None`` auto-detects (interpret only off-TPU)."""
+    interpret = resolve_interpret(interpret)
     N, s, M = z.shape
     gamma = jnp.asarray(gamma, jnp.int32)
     if gamma.ndim == 0:

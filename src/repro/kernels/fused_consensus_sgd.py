@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused last-microstep SGD + D2D consensus mixing.
+
+One consensus block of the TT-HF interval ends with an SGD update
+followed by the block-diagonal mixing einsum ``z_c <- W_c z_c`` (the
+``fused_power`` backend's precomputed ``W = V^Gamma``). Run separately
+those are two full parameter-stream HBM passes: read w / read g /
+write w, then read w / write w. This kernel fuses them into ONE pass —
+read w, read g, write mixed w — over the lane-padded flat ``(R, P)``
+replica buffer of the fused-interval step
+(:func:`repro.core.distributed.make_tthf_train_step` with
+``fused_interval=True``).
+
+Math (bitwise-matching the reference path, asserted in
+``tests/test_fused_interval.py``):
+
+    w' = w - eta * (g + wd * w)          (per replica, f32 accumulate)
+    z_c <- W_c @ w'_c                    (per cluster, s x s MXU matmul)
+
+Grid: (N, M / blk_m). The (s, s) mixing block and an (s, blk_m) tile
+of w and g are pinned in VMEM; each column of the tile mixes
+independently, so lane-padding between pytree leaves is harmless
+(zeros map to zeros).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
+
+LANE = 128
+
+
+def _kernel(w_ref, g_ref, mix_ref, eta_ref, o_ref, *,
+            weight_decay: float):
+    w = w_ref[0].astype(jnp.float32)          # (s, blk)
+    g = g_ref[0].astype(jnp.float32)
+    if weight_decay:
+        g = g + weight_decay * w
+    wp = w - eta_ref[0] * g
+    mixed = jnp.dot(mix_ref[0].astype(jnp.float32), wp,
+                    preferred_element_type=jnp.float32)
+    o_ref[0] = mixed.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("weight_decay", "blk_m", "interpret"))
+def fused_consensus_sgd(w: jax.Array, g: jax.Array, W: jax.Array,
+                        eta: jax.Array, weight_decay: float = 0.0,
+                        blk_m: Optional[int] = None,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """w, g: (N, s, M); W: (N, s, s); returns ``W @ (w - eta*g)``.
+
+    ``interpret=None`` auto-detects (interpret only off-TPU).
+    ``blk_m=None`` picks 4096 lanes compiled (VMEM-sized for small s)
+    and 65536 interpreted (fewer unrolled grid cells).
+    """
+    interpret = resolve_interpret(interpret)
+    if blk_m is None:
+        blk_m = 65_536 if interpret else 4_096
+    N, s, M = w.shape
+    assert g.shape == (N, s, M) and W.shape == (N, s, s)
+
+    # lane-align once: blk is a LANE multiple, M padded to a blk multiple
+    blk = max(LANE, min(blk_m, -(-M // LANE) * LANE))
+    pad = (-M) % blk
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad)))
+        g = jnp.pad(g, ((0, 0), (0, 0), (0, pad)))
+    Mp = M + pad
+    eta_arr = jnp.asarray(eta, jnp.float32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, weight_decay=weight_decay),
+        grid=(N, Mp // blk),
+        in_specs=[
+            pl.BlockSpec((1, s, blk), lambda n, m: (n, 0, m)),
+            pl.BlockSpec((1, s, blk), lambda n, m: (n, 0, m)),
+            pl.BlockSpec((1, s, s), lambda n, m: (n, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, s, blk), lambda n, m: (n, 0, m)),
+        out_shape=jax.ShapeDtypeStruct((N, s, Mp), w.dtype),
+        interpret=interpret,
+        name="fused_consensus_sgd",
+    )(w, g, W, eta_arr)
+    return out[:, :, :M] if pad else out

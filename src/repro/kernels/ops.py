@@ -1,21 +1,28 @@
 """jit'd public wrappers for the Pallas kernels.
 
-On this CPU container the kernels run in ``interpret=True`` mode (the
-kernel body executes in Python) — the TPU target flips
-``repro.kernels.INTERPRET`` to False. Wrappers handle padding and expose
-oracle-identical signatures so call-sites can swap kernel <-> ref freely.
+Off-TPU the kernels run in ``interpret=True`` mode (the kernel body
+executes as traced jnp ops); on a real TPU backend they compile via
+Mosaic. ``INTERPRET`` is auto-detected once per process by
+``repro.kernels.runtime.default_interpret`` — a kernel module imported
+directly (bypassing these wrappers) auto-detects the same way, so a TPU
+caller can no longer silently run interpreted. Wrappers handle padding
+and expose oracle-identical signatures so call-sites can swap
+kernel <-> ref freely.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_consensus_sgd as _fcs
 from repro.kernels import fused_sgd as _fs
 from repro.kernels import ssd_scan as _ss
 from repro.kernels import ref
+from repro.kernels.runtime import default_interpret
 
-# Flip to False when running on real TPUs.
-INTERPRET = True
+# Auto-detected: True off-TPU (interpret mode), False on real TPUs.
+# Still assignable for tests/benches that force one mode.
+INTERPRET = default_interpret()
 
 
 def consensus_mix(z: jax.Array, V: jax.Array, gamma: jax.Array,
@@ -47,4 +54,13 @@ def fused_sgd(w: jax.Array, g: jax.Array, eta, weight_decay: float = 0.0
                          interpret=INTERPRET)
 
 
-__all__ = ["consensus_mix", "ssd_scan", "fused_sgd", "ref", "INTERPRET"]
+def fused_consensus_sgd(w: jax.Array, g: jax.Array, W: jax.Array, eta,
+                        weight_decay: float = 0.0) -> jax.Array:
+    """Fused last-microstep SGD + W-mixing; w, g: (N, s, M), W: (N, s, s)."""
+    return _fcs.fused_consensus_sgd(w, g, W, eta,
+                                    weight_decay=weight_decay,
+                                    interpret=INTERPRET)
+
+
+__all__ = ["consensus_mix", "ssd_scan", "fused_sgd",
+           "fused_consensus_sgd", "ref", "INTERPRET"]

@@ -72,3 +72,13 @@ def fused_sgd_ref(w: jax.Array, g: jax.Array, eta: jax.Array,
     """w <- w - eta * (g + wd * w)."""
     gg = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
     return (w.astype(jnp.float32) - eta * gg).astype(w.dtype)
+
+
+def fused_consensus_sgd_ref(w: jax.Array, g: jax.Array, W: jax.Array,
+                            eta: jax.Array,
+                            weight_decay: float = 0.0) -> jax.Array:
+    """W_c @ (w_c - eta * (g_c + wd * w_c)); w, g: (N, s, M), W: (N, s, s)."""
+    wp = fused_sgd_ref(w, g, eta, weight_decay=weight_decay)
+    return jnp.einsum("nij,njm->nim", W.astype(jnp.float32),
+                      wp.astype(jnp.float32),
+                      preferred_element_type=jnp.float32).astype(w.dtype)

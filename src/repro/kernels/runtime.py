@@ -1,0 +1,35 @@
+"""Shared execution-mode detection for every Pallas kernel.
+
+The kernels run in ``interpret=True`` mode off-TPU (the kernel body
+executes as traced jnp ops) and compiled via Mosaic on real TPUs.
+Historically each kernel module hard-coded ``interpret: bool = True``
+as its own default, independent of ``ops.INTERPRET`` — a TPU caller
+importing a kernel directly would silently run interpreted. Every
+kernel now defaults to :func:`default_interpret` through one helper.
+
+``ops.INTERPRET`` remains the session-wide switch (tests monkeypatch
+it); kernel entry points take ``interpret=None`` -> auto-detect.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """True off-TPU (interpret mode), False on a real TPU backend.
+
+    Cached: ``jax.default_backend()`` initializes the backend, and the
+    answer cannot change within a process.
+    """
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> auto-detect; a concrete bool wins (tests/benches)."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+__all__ = ["default_interpret", "resolve_interpret"]

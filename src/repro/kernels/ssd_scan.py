@@ -74,12 +74,14 @@ def _kernel(x_ref, dt_ref, loga_ref, b_ref, c_ref, y_ref, hfin_ref, h_scr):
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x: jax.Array, dt: jax.Array, loga: jax.Array, B: jax.Array,
              C: jax.Array, chunk: int = 256,
-             interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+             interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
     """x: (BH, T, P), dt/loga: (BH, T), B/C: (BH, T, S).
 
     Returns (y: (BH, T, P), h_final: (BH, S, P)). T must be a multiple
     of ``chunk`` (ops.py pads).
     """
+    from repro.kernels.runtime import resolve_interpret
+    interpret = resolve_interpret(interpret)
     BH, T, P = x.shape
     S = B.shape[-1]
     assert T % chunk == 0, f"T={T} not a multiple of chunk={chunk}"

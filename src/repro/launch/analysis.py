@@ -99,9 +99,19 @@ class Roofline:
                  "collective": self.collective_s}
         return max(terms, key=terms.get)
 
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the roofline attained at the dominant bound:
+        compute term / max(all terms). 1.0 = compute-bound (running at
+        peak FLOPs if the bound is met); below 1.0 the gap is the
+        memory/collective overhang."""
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        return self.compute_s / bound if bound else 0.0
+
     def to_dict(self):
         d = asdict(self)
         d["dominant"] = self.dominant
+        d["roofline_fraction"] = self.roofline_fraction
         d["useful_flops_frac"] = (
             self.model_flops / self.flops_dev if self.flops_dev else 0.0)
         return d

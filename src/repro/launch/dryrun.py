@@ -1,20 +1,29 @@
 import os
 import sys
 
+
+def _argv_value(flag: str) -> str:
+    for _i, _a in enumerate(sys.argv):
+        if _a == flag and _i + 1 < len(sys.argv):
+            return sys.argv[_i + 1]
+        if _a.startswith(flag + "="):
+            return _a.split("=", 1)[1]
+    return ""
+
+
+# host placeholder device count must match the requested mesh and is
+# fixed BEFORE jax initializes: 512 for pod/multipod, 10,240 for the
+# scale-out lowering check (--mesh multipod10k = 40 pods x 256)
+_ndev = 10_240 if _argv_value("--mesh") == "multipod10k" else 512
 _flags = (os.environ.get("XLA_FLAGS", "")
-          + " --xla_force_host_platform_device_count=512")
+          + f" --xla_force_host_platform_device_count={_ndev}")
 # XLA's while-loop LICM hoists dtype converts of the remat residual
 # stack OUT of the backward loop, materializing a full fp32 copy of the
 # per-layer activations (2-30 GB) — disable it for TRAINING dry-runs.
 # For SERVING dry-runs LICM must stay ON: it hoists the (loop-invariant)
 # K/V gathers out of the flash kv scan; without it every block re-
 # gathers the full cache. Decide from argv BEFORE jax initializes.
-_shape_arg = ""
-for _i, _a in enumerate(sys.argv):
-    if _a == "--shape" and _i + 1 < len(sys.argv):
-        _shape_arg = sys.argv[_i + 1]
-    elif _a.startswith("--shape="):
-        _shape_arg = _a.split("=", 1)[1]
+_shape_arg = _argv_value("--shape")
 _is_train = (_shape_arg in ("", "train_4k")
              or "--sync" in " ".join(sys.argv))
 if _is_train:
@@ -62,11 +71,15 @@ SKIPS: dict[tuple[str, str], str] = {
 
 def build_tthf_program(model, shape, mesh, sync: str, consensus_mode: str,
                        tau: int = 8, consensus_every: int = 4,
-                       gamma: int = 2):
+                       gamma: int = 2, fused_interval: bool = False,
+                       donate: bool = True):
     """Lower one full TT-HF interval (Algorithm 1 lines 4-15) on the
     production mesh: replicas = pod*data slices, clusters = data-blocks
     (multi-pod: cluster == pod). Used by the §Perf paper-technique
-    hillclimb (--sync tthf-fused / tthf-rounds / star / local)."""
+    hillclimb (--sync tthf-fused / tthf-rounds / tthf-fused-interval /
+    star / local). ``fused_interval`` lowers the flat (R, P) carrier
+    step (DESIGN.md §12); ``donate=False`` keeps the param input buffer
+    alive, for the donated-vs-undonated memory_analysis delta."""
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core.distributed import (
@@ -89,10 +102,20 @@ def build_tthf_program(model, shape, mesh, sync: str, consensus_mode: str,
         granularity="pod" if pod_granular else "dp")
     from repro.launch.steps import param_dtype_for
     step, net = make_tthf_train_step(model, scale, dtype=jnp.bfloat16,
-                                     sync=sync)
+                                     sync=sync,
+                                     fused_interval=fused_interval,
+                                     param_dtype=param_dtype_for(model.cfg))
     p_abs, p_sh, b_sh = tthf_shardings(
         model, scale, mesh, param_dtype=param_dtype_for(model.cfg))
-    b = shape.global_batch // R
+    if fused_interval:
+        # the flat (R, P) carrier: rows over the replica axes, columns
+        # over model ranks (P is a LANE multiple, so 16 always divides)
+        spec = step.spec
+        p_abs = spec.abstract(R)
+        rows = (("pod",) if pod_granular
+                else ("pod", "data") if "pod" in sizes else ("data",))
+        p_sh = NamedSharding(mesh, P(rows, "model"))
+    b = max(1, shape.global_batch // R)
     if pod_granular:
         # giant-model TT-HF: per-replica microbatch reduced 4x (the
         # interval still sees tau microbatches; remat stack must fit
@@ -105,21 +128,27 @@ def build_tthf_program(model, shape, mesh, sync: str, consensus_mode: str,
                  in_shardings=(p_sh, {"tokens": b_sh, "labels": b_sh},
                                repl, repl),
                  out_shardings=(p_sh, repl),
-                 donate_argnums=(0,))
+                 donate_argnums=(0,) if donate else ())
     picks = jax.ShapeDtypeStruct((net.num_clusters,), jnp.int32)
     return fn, (p_abs, batch, picks, jax.ShapeDtypeStruct((), jnp.int32))
 
 
+# pods per multi-pod mesh variant (absent key = single pod)
+MESH_PODS = {"multipod": 2, "multipod10k": 40}
+
+
 def run_one(arch: str, shape_name: str, mesh_name: str,
             verbose: bool = True, sync: str = "baseline",
-            tau: int = 8, consensus_every: int = 4) -> dict:
+            tau: int = 8, consensus_every: int = 4,
+            donation_check: bool = False) -> dict:
     cfg = get_arch(arch)
     shape = get_shape(shape_name)
     if (arch, shape_name) in SKIPS:
         return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                 "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
 
-    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    mesh = make_production_mesh(multi_pod=mesh_name in MESH_PODS,
+                                pods=MESH_PODS.get(mesh_name, 2))
     model = build_model(cfg)
     t0 = time.time()
     rules_override = None
@@ -132,11 +161,12 @@ def run_one(arch: str, shape_name: str, mesh_name: str,
             fn, args = build_program(model, shape, mesh,
                                      rules_override=rules_override)
         else:
-            mode = "fused" if sync.endswith("fused") else "rounds"
+            mode = "fused" if "fused" in sync else "rounds"
             base = "tthf" if sync.startswith("tthf") else sync
-            fn, args = build_tthf_program(model, shape, mesh, base, mode,
-                                          tau=tau,
-                                          consensus_every=consensus_every)
+            fn, args = build_tthf_program(
+                model, shape, mesh, base, mode, tau=tau,
+                consensus_every=consensus_every,
+                fused_interval=(sync == "tthf-fused-interval"))
         lowered = fn.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -160,12 +190,43 @@ def run_one(arch: str, shape_name: str, mesh_name: str,
     rec.update(status="ok", lower_s=t_lower, compile_s=t_compile,
                arg_bytes=float(getattr(mem, "argument_size_in_bytes", 0)),
                out_bytes=float(getattr(mem, "output_size_in_bytes", 0)),
-               temp_bytes=float(getattr(mem, "temp_size_in_bytes", 0)))
+               temp_bytes=float(getattr(mem, "temp_size_in_bytes", 0)),
+               alias_bytes=float(getattr(mem, "alias_size_in_bytes", 0)))
+    if donation_check and sync != "baseline":
+        # the donation contract's memory claim, measured: recompile the
+        # same interval step WITHOUT donate_argnums and compare live
+        # param HBM (donated aliases the output onto the input buffer,
+        # so the undonated/donated ratio approaches 2x for the params)
+        with mesh:
+            fn2, args2 = build_tthf_program(
+                model, shape, mesh,
+                "tthf" if sync.startswith("tthf") else sync,
+                "fused" if "fused" in sync else "rounds", tau=tau,
+                consensus_every=consensus_every,
+                fused_interval=(sync == "tthf-fused-interval"),
+                donate=False)
+            mem2 = fn2.lower(*args2).compile().memory_analysis()
+
+        def _live(m, alias):
+            return float(getattr(m, "argument_size_in_bytes", 0)
+                         + getattr(m, "output_size_in_bytes", 0)) - alias
+        alias = float(getattr(mem, "alias_size_in_bytes", 0))
+        live_d = _live(mem, alias)
+        live_u = _live(mem2, float(getattr(mem2, "alias_size_in_bytes", 0)))
+        rec["donation"] = {
+            "alias_bytes": alias, "live_arg_out_donated": live_d,
+            "live_arg_out_undonated": live_u,
+            "param_hbm_ratio": live_u / max(live_d, 1.0)}
+        if verbose:
+            print(f"  donation: alias {alias:.3e}B  live arg+out "
+                  f"{live_u:.3e}B -> {live_d:.3e}B "
+                  f"({rec['donation']['param_hbm_ratio']:.2f}x)")
     if verbose:
         print(f"  roofline: compute {roof.compute_s*1e3:.2f}ms "
               f"memory {roof.memory_s*1e3:.2f}ms "
               f"collective {roof.collective_s*1e3:.2f}ms "
-              f"-> dominant: {roof.dominant}")
+              f"-> dominant: {roof.dominant} "
+              f"(fraction {rec['roofline_fraction']:.3f})")
     return rec
 
 
@@ -173,18 +234,25 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
-    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "multipod10k"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None, help="JSON output path or dir")
     ap.add_argument("--subprocess", action="store_true",
                     help="run each combo in a fresh interpreter")
     ap.add_argument("--sync", default="baseline",
                     choices=["baseline", "star", "local",
-                             "tthf-fused", "tthf-rounds"],
+                             "tthf-fused", "tthf-rounds",
+                             "tthf-fused-interval"],
                     help="lower the TT-HF interval step instead of the "
-                         "standard train/serve step (train_4k only)")
+                         "standard train/serve step (train_4k only); "
+                         "tthf-fused-interval = the flat (R, P) carrier "
+                         "step (DESIGN.md §12)")
     ap.add_argument("--tau", type=int, default=8)
     ap.add_argument("--consensus-every", type=int, default=4)
+    ap.add_argument("--donation-check", action="store_true",
+                    help="also compile the interval step WITHOUT buffer "
+                         "donation and record the live-param-HBM delta")
     ap.add_argument("--pair-schedule", action="store_true",
                     help="enable the pair-scheduled flash attention "
                          "(skips fully-masked blocks; §Perf)")
@@ -220,7 +288,8 @@ def main(argv=None):
                 rec = run_one(arch, shape, args.mesh,
                               verbose=args.out != "-", sync=args.sync,
                               tau=args.tau,
-                              consensus_every=args.consensus_every)
+                              consensus_every=args.consensus_every,
+                              donation_check=args.donation_check)
                 rec["sync"] = args.sync
                 rec["tau"] = args.tau
             except Exception as e:  # noqa: BLE001 — sweep must continue

@@ -8,10 +8,12 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, pods: int = 2):
     """Single pod: 256 chips as (data=16, model=16).
-    Multi-pod: 2 pods = 512 chips as (pod=2, data=16, model=16)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    Multi-pod: ``pods`` pods of 256 chips as (pod, data=16, model=16) —
+    the default 2 pods is the 512-chip production target; pods=40 is the
+    10,240-chip scale-out lowering check (``--mesh multipod10k``)."""
+    shape = (pods, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 

@@ -1,4 +1,6 @@
 from repro.train.trainer import ScaleTrainer, TrainerConfig
 from repro.train.metrics import MetricLogger
+from repro.train.prefetch import PrefetchLoader
 
-__all__ = ["ScaleTrainer", "TrainerConfig", "MetricLogger"]
+__all__ = ["ScaleTrainer", "TrainerConfig", "MetricLogger",
+           "PrefetchLoader"]

@@ -1,0 +1,114 @@
+"""Double-buffered host pipeline for interval batches (DESIGN.md §12).
+
+The synchronous trainer loop serializes three phases per interval:
+build the (tau, R, b, T) batch on host (python generators + np.stack),
+transfer it to the devices, then run the jitted interval step. The
+step dominates, so the host work can hide entirely under it:
+:class:`PrefetchLoader` runs the build+transfer in a daemon thread and
+keeps up to ``depth`` ready batches in a bounded queue — interval
+k+1's batch materializes while interval k computes.
+
+Determinism contract (asserted in ``tests/test_fused_interval.py``):
+the worker calls the SAME build function the synchronous path uses, on
+the same generators, strictly in order, from one thread — a prefetched
+run consumes byte-identical batches in the identical order. Draw
+accounting stays with the CONSUMER (``ScaleTrainer.run`` counts draws
+per batch it pops), so checkpoints never include batches that were
+prefetched but not yet trained on; a restore rebuilds the generators at
+the consumed position and simply discards the in-flight batch.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+import jax
+
+_SENTINEL = object()
+
+
+class PrefetchLoader:
+    """Pulls batches from ``build`` in a background thread.
+
+    build:  zero-arg callable returning the next batch (or raising
+            ``StopIteration`` to end the stream).
+    depth:  max batches in flight (1 = classic double buffering: one
+            batch computing, one building).
+    put:    optional device-placement callable applied to each built
+            batch IN THE WORKER (e.g. ``jax.device_put`` to the batch
+            sharding) so the H2D transfer also overlaps compute; the
+            default commits to the default device.
+
+    Use as a context manager or call :meth:`close` — the worker is a
+    daemon thread either way, so an abandoned loader cannot hang
+    interpreter exit.
+    """
+
+    def __init__(self, build: Callable[[], object], depth: int = 1,
+                 put: Optional[Callable[[object], object]] = None):
+        assert depth >= 1
+        self._build = build
+        self._put = jax.device_put if put is None else put
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._worker, name="interval-prefetch", daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            while not self._stop.is_set():
+                try:
+                    batch = self._put(self._build())
+                except StopIteration:
+                    break
+                # bounded put that stays responsive to close()
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(batch, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+                else:
+                    return
+        except BaseException as e:        # surfaced on the next get()
+            self._err = e
+        finally:
+            while True:                   # wake any blocked consumer
+                try:
+                    self._q.put_nowait(_SENTINEL)
+                    break
+                except queue.Full:
+                    try:
+                        self._q.get_nowait()
+                    except queue.Empty:
+                        pass
+
+    def get(self):
+        """Next batch, in build order. Raises the worker's exception if
+        it died, ``StopIteration`` when the stream ended."""
+        item = self._q.get()
+        if item is _SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        """Stop the worker and drop any prefetched batches."""
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

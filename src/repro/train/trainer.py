@@ -15,6 +15,7 @@ aggregation argument, the optional consensus-matrix refresh, and one
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Optional
@@ -33,6 +34,7 @@ from repro.data.tokens import synthetic_token_batches
 from repro.models import ModelApi, build_model
 from repro.rounds import RoundProgram, RoundResolver
 from repro.train.metrics import MetricLogger
+from repro.train.prefetch import PrefetchLoader
 
 # the only dtypes the microstep math supports; anything else (a typo'd
 # "float16") used to silently coerce to bfloat16
@@ -51,6 +53,14 @@ class TrainerConfig:
     log_path: Optional[str] = None
     dtype: str = "float32"
     seed: int = 0
+    # raw-speed knobs (DESIGN.md §12) — all preserve trajectories
+    # bitwise; flip off to A/B against the straight-line path
+    donate: bool = True             # donate params+batch buffers to the
+                                    # jitted step (halves peak param HBM)
+    fused_interval: bool = False    # flat (R, P) param carrier + fused
+                                    # SGD+consensus block-ends
+    prefetch: bool = True           # build/transfer interval k+1's
+                                    # batch while interval k computes
 
     def __post_init__(self):
         if self.dtype not in _DTYPES:
@@ -89,7 +99,12 @@ class ScaleTrainer:
         refreshable = program.is_dynamic and sync == "tthf"
         step, self.net = make_tthf_train_step(
             self.model, scale, dtype=dtype, sync=sync,
-            refreshable=refreshable, hierarchy=program.hierarchy)
+            refreshable=refreshable, hierarchy=program.hierarchy,
+            fused_interval=tcfg.fused_interval)
+        # fused-interval runs carry self.params as the step's flat
+        # (R, P) buffer; the spec unflattens at eval/checkpoint/serving
+        # boundaries (checkpoints stay in the pytree format either way)
+        self._spec = getattr(step, "spec", None)
         self._plan = None
         if refreshable:
             self._plan = build_mixing_plan(
@@ -99,7 +114,19 @@ class ScaleTrainer:
         self.hierarchy = self._resolver.hierarchy
         self.tree = self._resolver.tree
         self.tvnet = self._resolver.tvnet
-        self._step = jax.jit(step)
+        # donation contract (DESIGN.md §12): once a step is dispatched,
+        # the params (and batch) buffers passed in belong to XLA — the
+        # trainer rebinds self.params to the output before anyone reads
+        # it, and every consumer (eval/save/serving) goes through that
+        # rebound value. Holders of pre-step references must copy.
+        # The int32 batch can never alias the f32 outputs, so donating
+        # it only frees its buffer for scratch — silence the per-compile
+        # "not usable" nag about exactly that.
+        if tcfg.donate:
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+        self._step = jax.jit(
+            step, donate_argnums=(0, 1) if tcfg.donate else ())
         self._eval_loss = jax.jit(
             lambda p, b: self.model.loss(p, b, dtype=dtype, remat=False))
         self.ledger = CommLedger()
@@ -135,16 +162,30 @@ class ScaleTrainer:
     def init(self):
         init_params = self.model.init(jax.random.PRNGKey(self.tcfg.seed))
         self.params = stack_replicas(init_params, self.scale.replicas)
+        if self._spec is not None:
+            self.params = self._spec.flatten(self.params)
         self._global = init_params
         return self
 
-    def _interval_batch(self):
+    def _build_interval_batch(self):
+        """Pure batch build — no draw accounting (the prefetch worker
+        calls this off-thread; draws are counted at consumption)."""
         tau, R = self.scale.tau, self.scale.replicas
         mbs = [[next(g) for _ in range(tau)] for g in self._gens]
-        self._train_draws += tau
         return {k: jnp.asarray(np.stack(
             [[mbs[r][t][k] for r in range(R)] for t in range(tau)]))
             for k in ("tokens", "labels")}
+
+    def _interval_batch(self):
+        batch = self._build_interval_batch()
+        self._train_draws += self.scale.tau
+        return batch
+
+    def _replica0(self):
+        """Replica 0's per-replica param pytree (either carrier)."""
+        if self._spec is not None:
+            return self._spec.unflatten_one(self.params[0])
+        return jax.tree.map(lambda l: l[0], self.params)
 
     def _global_params(self):
         """The served global model. Flat runs: replica 0's copy —
@@ -154,7 +195,7 @@ class ScaleTrainer:
         under different fog nodes disagree between root events)."""
         if self.tree is not None:
             return self._global
-        return jax.tree.map(lambda l: l[0], self.params)
+        return self._replica0()
 
     def evaluate(self) -> float:
         g = self._global_params()
@@ -181,7 +222,7 @@ class ScaleTrainer:
         if ev.root_served:
             # a live root event just broadcast the root model to every
             # replica — snapshot it as the served global model
-            self._global = jax.tree.map(lambda l: l[0], self.params)
+            self._global = self._replica0()
         ev.billing.charge(self.ledger)
         return loss
 
@@ -205,16 +246,21 @@ class ScaleTrainer:
         }
         if self.tree is not None:
             extra["global"] = self._global   # the served root snapshot
-        save_train_state(p, self.params, (), self.interval, extra=extra)
+        # checkpoints always hold the pytree form — fused and straight
+        # runs read each other's checkpoints freely
+        params = (self._spec.unflatten(self.params)
+                  if self._spec is not None else self.params)
+        save_train_state(p, params, (), self.interval, extra=extra)
         return p
 
     def restore(self, path: str):
         self.params, _, self.interval, extra = restore_train_state(path)
+        if self._spec is not None:
+            self.params = self._spec.flatten(self.params)
         if self.tree is not None:
             # the served root snapshot (pre-hierarchy checkpoints lack
             # it: fall back to replica 0, exact from the next root on)
-            self._global = extra.get(
-                "global", jax.tree.map(lambda l: l[0], self.params))
+            self._global = extra.get("global", self._replica0())
         if "key" in extra:
             self.key = jnp.asarray(extra["key"])
             self._train_draws = int(extra["train_draws"])
@@ -238,19 +284,33 @@ class ScaleTrainer:
         if self.params is None:
             self.init()
         n = intervals if intervals is not None else self.tcfg.intervals
-        for _ in range(n):
-            batch = self._interval_batch()
-            self.key, kp = jax.random.split(self.key)
-            loss = self._interval(batch, kp)
-            self.interval += 1
-            logs = {"train_loss": float(loss),
-                    "uplinks": self.ledger.uplinks,
-                    "d2d_msgs": self.ledger.d2d_msgs}
-            if self.tcfg.eval_every and \
-                    self.interval % self.tcfg.eval_every == 0:
-                logs["eval_loss"] = self.evaluate()
-            self.metrics.log(self.interval, **logs)
-            if self.tcfg.ckpt_every and \
-                    self.interval % self.tcfg.ckpt_every == 0:
-                self.save()
+        loader = None
+        if self.tcfg.prefetch and n > 1:
+            # interval k+1's batch builds/transfers while k computes;
+            # draws are counted HERE per consumed batch, so a mid-run
+            # checkpoint never includes the in-flight prefetched batch
+            loader = PrefetchLoader(self._build_interval_batch, depth=1)
+        try:
+            for _ in range(n):
+                if loader is not None:
+                    batch = loader.get()
+                    self._train_draws += self.scale.tau
+                else:
+                    batch = self._interval_batch()
+                self.key, kp = jax.random.split(self.key)
+                loss = self._interval(batch, kp)
+                self.interval += 1
+                logs = {"train_loss": float(loss),
+                        "uplinks": self.ledger.uplinks,
+                        "d2d_msgs": self.ledger.d2d_msgs}
+                if self.tcfg.eval_every and \
+                        self.interval % self.tcfg.eval_every == 0:
+                    logs["eval_loss"] = self.evaluate()
+                self.metrics.log(self.interval, **logs)
+                if self.tcfg.ckpt_every and \
+                        self.interval % self.tcfg.ckpt_every == 0:
+                    self.save()
+        finally:
+            if loader is not None:
+                loader.close()
         return self

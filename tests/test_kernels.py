@@ -106,7 +106,10 @@ def test_ssd_scan_state_carry_across_chunks():
 # fused_sgd
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("shape", [(8,), (1000, 37), (3, 5, 7, 11)])
+# tiny leaves (n < 128) and odd sizes straddling the lane width pin the
+# block-size logic: blocks must stay lane multiples, pad must trim back
+@pytest.mark.parametrize("shape", [(8,), (127,), (129,), (1000, 37),
+                                   (3, 5, 7, 11)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("wd", [0.0, 0.1])
 def test_fused_sgd(shape, dtype, wd):
@@ -118,6 +121,64 @@ def test_fused_sgd(shape, dtype, wd):
     tol = 1e-6 if dtype == jnp.float32 else 1e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32), atol=tol)
+
+
+def test_fused_sgd_block_is_lane_aligned():
+    from repro.kernels.fused_sgd import LANE
+    # n just under/over the lane width must still produce lane-multiple
+    # blocks (the old min(blk, max(n, 8)) could hand Mosaic blk=37)
+    for n in (8, 127, 128, 129, 1000 * 37):
+        blk = max(LANE, min(65_536, -(-n // LANE) * LANE))
+        assert blk % LANE == 0
+
+
+# ---------------------------------------------------------------------------
+# fused_consensus_sgd: last-microstep SGD + W-mixing in one pass
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,s,M", [(2, 4, 64), (4, 2, 937), (1, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("wd", [0.0, 0.1])
+def test_fused_consensus_sgd(N, s, M, dtype, wd):
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(N, s, M)), dtype)
+    g = jnp.asarray(rng.normal(size=(N, s, M)), dtype)
+    V = _V(N, s)
+    W = jnp.asarray(np.stack([np.linalg.matrix_power(
+        np.asarray(V[c], np.float64), 2) for c in range(N)]), jnp.float32)
+    out = ops.fused_consensus_sgd(w, g, W, 0.01, weight_decay=wd)
+    expect = ref.fused_consensus_sgd_ref(w, g, W, jnp.asarray(0.01),
+                                         weight_decay=wd)
+    assert out.shape == (N, s, M) and out.dtype == dtype
+    # bf16: the ref rounds to bf16 between the SGD update and the mix,
+    # the kernel keeps f32 throughout — up to ~2 bf16 ulp apart, so the
+    # bound must scale with magnitude (rtol), not be purely absolute
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_fused_consensus_sgd_matches_jitted_two_pass():
+    """vs the jitted unfused two-pass graph (SGD then mix) — the jit-to-
+    jit comparison the fused-interval step's bitwise contract rests on."""
+    from repro.kernels.fused_consensus_sgd import fused_consensus_sgd
+    N, s, M = 2, 4, 384
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(N, s, M)), jnp.float32)
+    V = _V(N, s)
+    W = jnp.asarray(np.stack([np.linalg.matrix_power(
+        np.asarray(V[c], np.float64), 3) for c in range(N)]), jnp.float32)
+
+    @jax.jit
+    def two_pass(w, g, W):
+        wp = w - jnp.float32(0.01) * g
+        return jnp.einsum("nij,njm->nim", W, wp,
+                          preferred_element_type=jnp.float32)
+
+    fused = fused_consensus_sgd(w, g, W, jnp.float32(0.01))
+    assert np.array_equal(np.asarray(fused), np.asarray(two_pass(w, g, W)))
 
 
 def test_trainer_with_kernel_matches_without():
