@@ -16,7 +16,7 @@ import traceback
 SUITES = ("fig4_gamma", "fig5_tau", "fig6_energy", "theory_bound",
           "kernel_bench", "scale_sync", "topology_ablation", "roofline",
           "dynamics_bench", "hierarchy_bench", "rounds_bench",
-          "serving_bench")
+          "serving_bench", "obs_overhead")
 
 
 def main(argv=None) -> int:
@@ -25,25 +25,45 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-dir", default=None,
+                    help="write a run manifest (config hash, git SHA, "
+                         "mesh) into this dir before sweeping")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the sweep in jax.profiler.trace "
+                         "(requires --trace-dir)")
     args = ap.parse_args(argv)
 
     chosen = (args.only.split(",") if args.only else SUITES)
+    if args.trace_dir:
+        from repro.obs.manifest import write_manifest
+        write_manifest(args.trace_dir,
+                       config={"scale": args.scale, "seed": args.seed,
+                               "suites": list(chosen)},
+                       extra={"run": "benchmarks"})
+    if args.profile and args.trace_dir:
+        from repro.obs.trace import profiler_trace
+        prof = profiler_trace(args.trace_dir)
+    else:
+        from contextlib import nullcontext
+        prof = nullcontext()
     print("name,us_per_call,derived")
     rc = 0
-    for suite in chosen:
-        mod_name = suite if suite in SUITES else f"{suite}"
-        try:
-            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            t0 = time.time()
-            rows = mod.run(scale=args.scale, seed=args.seed)
-            for row in rows:
-                print(row.csv())
-            print(f"_suite/{suite},{(time.time()-t0)*1e6:.0f},ok",
-                  flush=True)
-        except Exception as e:  # noqa: BLE001 — report, keep sweeping
-            rc = 1
-            print(f"_suite/{suite},0,ERROR:{type(e).__name__}:{e}")
-            traceback.print_exc(file=sys.stderr)
+    with prof:
+        for suite in chosen:
+            mod_name = suite if suite in SUITES else f"{suite}"
+            try:
+                mod = __import__(f"benchmarks.{mod_name}",
+                                 fromlist=["run"])
+                t0 = time.time()
+                rows = mod.run(scale=args.scale, seed=args.seed)
+                for row in rows:
+                    print(row.csv())
+                print(f"_suite/{suite},{(time.time()-t0)*1e6:.0f},ok",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                rc = 1
+                print(f"_suite/{suite},0,ERROR:{type(e).__name__}:{e}")
+                traceback.print_exc(file=sys.stderr)
     return rc
 
 

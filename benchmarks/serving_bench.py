@@ -75,6 +75,10 @@ def run(scale: str = "ci", seed: int = 0):
             dt = time.time() - t0
             assert stats.requests_done == n_req, (kind, sname, stats)
             per_sched[sname] = stats
+            # per-request latency percentiles (step-clock ticks) from
+            # the retirement records the scheduler now keeps
+            ql = np.array([r.queue_latency for r in stats.records])
+            tt = np.array([r.ttft for r in stats.records if r.ttft >= 0])
             rows.append(Row(
                 f"serving/{kind}/{sname}", dt * 1e6 / max(
                     stats.decode_steps, 1),
@@ -82,7 +86,11 @@ def run(scale: str = "ci", seed: int = 0):
                 f"toks={stats.tokens_generated};"
                 f"util={stats.utilization:.3f};"
                 f"tok_per_step={stats.tokens_generated / max(stats.decode_steps, 1):.2f};"
-                f"tok_s={stats.tokens_generated / max(dt, 1e-9):.1f}"))
+                f"tok_s={stats.tokens_generated / max(dt, 1e-9):.1f};"
+                f"queue_p50={np.percentile(ql, 50):.0f};"
+                f"queue_p95={np.percentile(ql, 95):.0f};"
+                f"ttft_p50={np.percentile(tt, 50):.0f};"
+                f"ttft_p95={np.percentile(tt, 95):.0f}"))
         w, c = per_sched["wave"], per_sched["continuous"]
         rows.append(Row(
             f"serving/{kind}/speedup", 0.0,

@@ -46,6 +46,20 @@ class CommLedger:
     # ``uplinks`` stays the total over all tiers, so flat runs are
     # unchanged and energy/delay keep pricing every transmitted model.
     uplinks_by_level: dict = field(default_factory=dict)
+    # per-event attribution (repro.obs, DESIGN.md §13): every record_*
+    # call appends rows {"kind", "event", ...} so the totals above can
+    # be decomposed per cluster / per level / per event after the run.
+    # Attribution never feeds pricing — energy()/delay() read only the
+    # counters — and checkpoints persist the counters, not the rows.
+    events: list = field(default_factory=list)
+    _event_idx: int = 0
+
+    def next_event(self) -> int:
+        """Advance the attribution event index (one logical comms
+        event: a consensus event, an aggregation, an interval).
+        Returns the new index; rows recorded after this call carry it."""
+        self._event_idx += 1
+        return self._event_idx
 
     def record_uplinks(self, n: int, level: int = 1,
                        uplink_delay_mults=None) -> None:
@@ -54,6 +68,8 @@ class CommLedger:
         self.uplinks += n
         self.uplinks_by_level[level] = \
             self.uplinks_by_level.get(level, 0) + n
+        self.events.append({"kind": "uplink", "event": self._event_idx,
+                            "level": int(level), "n": int(n)})
         if uplink_delay_mults is not None:
             for m in uplink_delay_mults:
                 self.straggler_uplink_extra += max(float(m) - 1.0, 0.0)
@@ -65,6 +81,8 @@ class CommLedger:
         (>= 1); each uplink pays its own device's multiplier."""
         self.record_uplinks(devices_sampled, level, uplink_delay_mults)
         self.broadcasts += 1
+        self.events.append({"kind": "broadcast",
+                            "event": self._event_idx, "n": 1})
 
     def record_hierarchy_event(self, uplinks_by_level: dict,
                                uplink_delay_mults=None) -> None:
@@ -84,16 +102,66 @@ class CommLedger:
         """rounds/edges: iterables over clusters. ``tail_mult_per_
         cluster``: the slowest active participant's multiplier — every
         round in that cluster completes at the tail's pace."""
-        for i, (g, e) in enumerate(zip(rounds_per_cluster,
-                                       edges_per_cluster)):
+        rounds = list(rounds_per_cluster)
+        edges = list(edges_per_cluster)
+        n = len(rounds)
+        for i, (g, e) in enumerate(zip(rounds, edges)):
             self.d2d_rounds += int(g)
             self.d2d_msgs += int(g) * 2 * int(e)   # bidirectional
+            if int(g):
+                # position within one event's per-cluster vector; a
+                # caller replaying repeats must call once per repeat
+                # (Billing.charge does) so i stays the cluster index
+                self.events.append({
+                    "kind": "consensus", "event": self._event_idx,
+                    "cluster": i % max(n, 1), "rounds": int(g),
+                    "msgs": int(g) * 2 * int(e)})
             if tail_mult_per_cluster is not None:
                 mult = float(tail_mult_per_cluster[i])
                 self.straggler_round_extra += int(g) * max(mult - 1.0, 0.0)
 
     def record_local_step(self, devices: int = 1) -> None:
         self.local_steps += devices
+
+    # -- attribution queries (repro.obs) ------------------------------------
+    def d2d_by_cluster(self) -> dict[int, dict[str, int]]:
+        """{cluster: {rounds, msgs}} summed over every consensus row."""
+        out: dict[int, dict[str, int]] = {}
+        for ev in self.events:
+            if ev["kind"] != "consensus":
+                continue
+            d = out.setdefault(ev["cluster"], {"rounds": 0, "msgs": 0})
+            d["rounds"] += ev["rounds"]
+            d["msgs"] += ev["msgs"]
+        return out
+
+    def uplinks_by_event(self) -> dict[int, int]:
+        out: dict[int, int] = {}
+        for ev in self.events:
+            if ev["kind"] == "uplink":
+                out[ev["event"]] = out.get(ev["event"], 0) + ev["n"]
+        return out
+
+    def attribution_totals(self) -> dict:
+        """Recompute the headline counters from the attribution rows —
+        tests assert these equal the counters the pricing reads."""
+        up = sum(e["n"] for e in self.events if e["kind"] == "uplink")
+        bc = sum(e["n"] for e in self.events if e["kind"] == "broadcast")
+        msgs = sum(e["msgs"] for e in self.events
+                   if e["kind"] == "consensus")
+        rounds = sum(e["rounds"] for e in self.events
+                     if e["kind"] == "consensus")
+        by_level: dict[int, int] = {}
+        for e in self.events:
+            if e["kind"] == "uplink":
+                by_level[e["level"]] = by_level.get(e["level"], 0) + e["n"]
+        return {"uplinks": up, "broadcasts": bc, "d2d_msgs": msgs,
+                "d2d_rounds": rounds, "uplinks_by_level": by_level}
+
+    def attribution_since(self, idx: int) -> list[dict]:
+        """Rows appended after ``idx`` (= a previous ``len(events)``) —
+        the per-round comms delta the telemetry stream records."""
+        return self.events[idx:]
 
     # -- pricing ------------------------------------------------------------
     def energy(self, e_ratio: float, e_glob: float = E_GLOB_J) -> float:

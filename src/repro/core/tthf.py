@@ -40,6 +40,7 @@ from repro.core.schedule import adaptive_gamma, fixed_gamma, make_lr_schedule
 from repro.core.topology import Network, build_network
 from repro.data.synth import FederatedDataset
 from repro.models.simple import SimModel
+from repro.obs.sink import NULL_OBS
 from repro.rounds import RoundProgram, RoundResolver
 
 
@@ -145,6 +146,12 @@ class TTHFTrainer:
         # two round-program events runs inside ONE scan dispatch
         self._scan_local = jax.jit(self._scan_local_impl)
         self._scan_local_dyn = jax.jit(self._scan_local_dyn_impl)
+        # observability (repro.obs): probes/gauges built lazily on the
+        # first instrumented run — read-only, so instrumented and
+        # uninstrumented trajectories are bitwise-identical
+        self._obs_probe = None
+        self._obs_grad_probe = None
+        self._obs_gauges = None
 
     # ------------------------------------------------------------------
     def init(self, seed: int = 0) -> TTHFState:
@@ -401,9 +408,88 @@ class TTHFTrainer:
         return k_agg, live
 
     # ------------------------------------------------------------------
+    # observability (DESIGN.md §13) — read-only probes + theory gauges
+    # ------------------------------------------------------------------
+    def _ensure_obs(self):
+        from repro.obs.telemetry import (
+            TheoryGauges, default_constants, make_divergence_probe,
+            make_sim_grad_probe)
+
+        if self._obs_probe is None:
+            self._obs_probe = make_divergence_probe(
+                self.net.num_clusters, self.net.cluster_size,
+                self.net.varrho)
+            self._obs_grad_probe = make_sim_grad_probe(
+                self.model, self.x, self.y)
+        if self._obs_gauges is None:
+            algo = self.algo
+            k = default_constants(float(np.min(self.net.varrho)))
+            if algo.constant_lr > 0:
+                self._obs_gauges = TheoryGauges(
+                    constants=k, tau=algo.tau, model_dim=self.model_dim,
+                    phi=algo.phi, lr=algo.constant_lr)
+            else:
+                self._obs_gauges = TheoryGauges(
+                    constants=k, tau=algo.tau, model_dim=self.model_dim,
+                    phi=algo.phi, gamma=algo.gamma, alpha=algo.alpha)
+
+    def _upsilon_for(self, st, spec):
+        """Pre-mixing Definition-2 divergence for a consensus event —
+        the measured Υ_c that Lemma 1's bound takes as input."""
+        if spec is not None and spec.dynamic:
+            return np.asarray(self._upsilon_dyn(
+                st.params, jnp.asarray(spec.device_up)))
+        return np.asarray(self._upsilon(st.params))
+
+    def _emit_round_telemetry(self, obs, st, b, ev, gamma_used, ups_pre,
+                              eta_b, t_prev_agg, ledger_mark):
+        """One fenced drain per round: block on the round's params,
+        run the jitted probe, and emit the measured quantities, the
+        theory-bound gauges, and the round's comms attribution into
+        the shared JSONL stream (same ``step`` for all three)."""
+        jax.block_until_ready(jax.tree.leaves(st.params)[0])
+        aux = {k: np.asarray(v)
+               for k, v in self._obs_probe(st.params).items()}
+        rec = {"active_devices": ev.active_devices, "eta": float(eta_b),
+               **aux}
+        rec.update(self._obs_gauges.round_gauges(b, t_prev_agg))
+        if ev.consensus is not None:
+            spec = ev.consensus
+            lambdas = (spec.lambdas if spec.dynamic
+                       else self.net.lambdas)
+            sizes = (spec.active_sizes if spec.dynamic
+                     else self.net.cluster_size)
+            rec["gamma_used"] = gamma_used
+            rec["upsilon_pre"] = ups_pre
+            rec["lemma1_bound"] = self._obs_gauges.lemma1(
+                lambdas, gamma_used, sizes, ups_pre)
+        obs.emit("round", b, **rec)
+        rows = self.ledger.attribution_since(ledger_mark)
+        if rows:
+            up_lv, d2d_cl = {}, {}
+            ups = msgs = rounds = 0
+            for r in rows:
+                if r["kind"] == "uplink":
+                    ups += r["n"]
+                    up_lv[r["level"]] = up_lv.get(r["level"], 0) + r["n"]
+                elif r["kind"] == "consensus":
+                    msgs += r["msgs"]
+                    rounds += r["rounds"]
+                    c = r["cluster"]
+                    d2d_cl[c] = d2d_cl.get(c, 0) + r["msgs"]
+            obs.emit("comm", b, uplinks=ups, uplinks_by_level=up_lv,
+                     d2d_msgs=msgs, d2d_rounds=rounds,
+                     d2d_msgs_by_cluster=d2d_cl,
+                     event=self.ledger._event_idx)
+        obs.counter("ledger", uplinks=self.ledger.uplinks,
+                    d2d_msgs=self.ledger.d2d_msgs,
+                    local_steps=self.ledger.local_steps)
+
+    # ------------------------------------------------------------------
     def run(self, steps: int, seed: int = 0, eval_every: int = 5,
             state: TTHFState | None = None,
-            record_dispersion: bool = True) -> tuple[TTHFState, History]:
+            record_dispersion: bool = True,
+            obs=None) -> tuple[TTHFState, History]:
         """Drive Algorithm 1 — ONE loop for every scenario.
 
         The :class:`~repro.rounds.resolver.RoundResolver` owns the
@@ -419,44 +505,74 @@ class TTHFTrainer:
         trajectories are bit-for-bit those of the pre-engine loops.
         """
         assert eval_every >= 1, "eval_every must be a positive period"
+        obs = obs if obs is not None else NULL_OBS
         st = state or self.init(seed)
+        if obs.enabled:
+            self._ensure_obs()      # model_dim is set by init()
+        self._resolver.obs = obs
         hist = History()
         res = self._resolver
         N = self.net.num_clusters
         t_last = st.t + steps
+        t_prev_agg = st.t           # Σ_t spans since the last aggregation
         t = st.t + 1
-        while t <= t_last:
-            b = (res.span_end(t, t_last, eval_every) if self.chunked
-                 else t)
-            k_agg, live = self._local_span(st, t, b)
-            self.ledger.record_local_step(live)
+        with obs.span("run", mode="sim", steps=steps, t0=st.t):
+            while t <= t_last:
+                b = (res.span_end(t, t_last, eval_every) if self.chunked
+                     else t)
+                with obs.span("round", t=b):
+                    with obs.span("interval", t_from=t, t_to=b):
+                        k_agg, live = self._local_span(st, t, b)
+                    self.ledger.record_local_step(live)
 
-            eta_b = self.eta(b - 1)
-            ev = res.resolve(b, k_agg)
-            gamma_used = np.zeros((N,), np.int32)
-            if ev.consensus is not None:
-                gamma_used = self._consensus_event(st, ev.consensus,
-                                                   eta_b)
-            if ev.aggregation is not None:
-                self._apply_aggregation(st, ev.aggregation, k_agg)
-            ev.billing.charge(self.ledger, gamma_used)
+                    eta_b = self.eta(b - 1)
+                    ev = res.resolve(b, k_agg)
+                    ups_pre = None
+                    if ev.consensus is not None and obs.enabled:
+                        ups_pre = self._upsilon_for(st, ev.consensus)
+                    gamma_used = np.zeros((N,), np.int32)
+                    if ev.consensus is not None:
+                        with obs.span("consensus_event", t=b):
+                            gamma_used = self._consensus_event(
+                                st, ev.consensus, eta_b)
+                    if ev.aggregation is not None:
+                        with obs.span("aggregation", t=b,
+                                      kind=ev.aggregation.kind):
+                            self._apply_aggregation(st, ev.aggregation,
+                                                    k_agg)
+                    ledger_mark = len(self.ledger.events)
+                    ev.billing.charge(self.ledger, gamma_used)
+                    if obs.enabled:
+                        self._emit_round_telemetry(
+                            obs, st, b, ev, gamma_used, ups_pre, eta_b,
+                            t_prev_agg, ledger_mark)
+                    if ev.aggregation is not None:
+                        t_prev_agg = b
 
-            if b % eval_every == 0 or b == t_last:
-                loss, acc = self._eval(st.global_params)
-                hist.ts.append(b)
-                hist.global_loss.append(float(loss))
-                hist.global_acc.append(float(acc))
-                if record_dispersion:
-                    hist.dispersion.append(float(self._dispersion(st.params)))
-                    hist.consensus_err.append(
-                        float(self._consensus_error(st.params)))
-                hist.gamma_used.append(gamma_used.copy())
-                hist.uplinks.append(self.ledger.uplinks)
-                hist.d2d_msgs.append(self.ledger.d2d_msgs)
-                hist.active_devices.append(ev.active_devices)
-            t = b + 1
+                    if b % eval_every == 0 or b == t_last:
+                        loss, acc = self._eval(st.global_params)
+                        hist.ts.append(b)
+                        hist.global_loss.append(float(loss))
+                        hist.global_acc.append(float(acc))
+                        if record_dispersion:
+                            hist.dispersion.append(
+                                float(self._dispersion(st.params)))
+                            hist.consensus_err.append(
+                                float(self._consensus_error(st.params)))
+                        hist.gamma_used.append(gamma_used.copy())
+                        hist.uplinks.append(self.ledger.uplinks)
+                        hist.d2d_msgs.append(self.ledger.d2d_msgs)
+                        hist.active_devices.append(ev.active_devices)
+                        if obs.enabled:
+                            obs.emit(
+                                "eval", b, loss=float(loss),
+                                acc=float(acc),
+                                grad_norm=float(self._obs_grad_probe(
+                                    st.global_params)))
+                t = b + 1
 
         st.t += steps
+        obs.flush()
         return st, hist
 
 

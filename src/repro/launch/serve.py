@@ -20,13 +20,19 @@ import numpy as np
 
 
 def _run_scheduler(args, cfg, model, params):
+    from repro.obs.sink import make_obs
     from repro.serving.scheduler import Request, make_scheduler, run_trace
 
     rng = np.random.default_rng(args.seed)
+    obs = make_obs(args.trace_dir, profile=args.profile,
+                   run_name="serve",
+                   config={"args": vars(args)},
+                   extra={"arch": cfg.name, "scheduler": args.scheduler})
     sched = make_scheduler(args.scheduler, model, slots=args.batch,
                            max_prompt=args.prompt_len,
                            max_total=args.prompt_len + args.gen,
-                           temperature=args.temperature, seed=args.seed)
+                           temperature=args.temperature, seed=args.seed,
+                           obs=obs)
     arrivals = []
     step = 0
     for rid in range(args.requests):
@@ -37,7 +43,19 @@ def _run_scheduler(args, cfg, model, params):
                                        max_new=args.gen)))
         step += int(rng.poisson(args.arrival_gap))
     t0 = time.time()
-    stats = run_trace(sched, params, arrivals)
+    try:
+        stats = run_trace(sched, params, arrivals)
+        if obs.enabled:
+            # one JSONL record per retired request — queue latency and
+            # TTFT in step-clock ticks, same stream as everything else
+            for r in stats.records:
+                obs.emit("request", r.retire, rid=r.rid,
+                         submit=r.submit, admit=r.admit,
+                         first_token=r.first_token,
+                         queue_latency=r.queue_latency, ttft=r.ttft,
+                         decode=r.decode, budget=r.budget)
+    finally:
+        obs.close()
     dt = time.time() - t0
     print(f"arch={cfg.name} scheduler={args.scheduler} slots={args.batch} "
           f"requests={args.requests}")
@@ -46,6 +64,14 @@ def _run_scheduler(args, cfg, model, params):
           f"tokens={stats.tokens_generated} "
           f"util={stats.utilization:.2f} "
           f"({stats.tokens_generated / max(dt, 1e-9):.1f} tok/s)")
+    if stats.records:
+        ql = np.array([r.queue_latency for r in stats.records])
+        tt = np.array([r.ttft for r in stats.records if r.ttft >= 0])
+        if len(tt):
+            print(f"queue latency (steps): p50={np.percentile(ql, 50):.0f} "
+                  f"p95={np.percentile(ql, 95):.0f}  "
+                  f"ttft: p50={np.percentile(tt, 50):.0f} "
+                  f"p95={np.percentile(tt, 95):.0f}")
     return 0
 
 
@@ -66,6 +92,11 @@ def main(argv=None):
                     help="number of requests for scheduler modes")
     ap.add_argument("--arrival-gap", type=float, default=2.0,
                     help="mean Poisson inter-arrival gap (decode steps)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="observability dir (repro.obs): Chrome trace, "
+                         "per-request latency JSONL, run manifest")
+    ap.add_argument("--profile", action="store_true",
+                    help="also wrap the run in jax.profiler.trace")
     args = ap.parse_args(argv)
 
     import jax

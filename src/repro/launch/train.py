@@ -63,9 +63,19 @@ def run_sim(args):
                           phi=args.phi)
     tr = TTHFTrainer(model, data, topo, algo, batch_size=args.batch,
                      program=build_program(args, algo.tau))
+    # observability (repro.obs §13): --trace-dir turns on spans +
+    # theory-bound telemetry + manifest; --profile adds jax.profiler
+    from repro.obs.sink import make_obs
+    obs = make_obs(args.trace_dir, profile=args.profile,
+                   run_name="train-sim",
+                   config={"args": vars(args), "algo": algo, "topo": topo},
+                   extra={"mode": "sim", "model": args.model})
     t0 = time.time()
-    st, hist = tr.run(steps=args.steps, seed=args.seed,
-                      eval_every=args.eval_every)
+    try:
+        st, hist = tr.run(steps=args.steps, seed=args.seed,
+                          eval_every=args.eval_every, obs=obs)
+    finally:
+        obs.close()
     dt = time.time() - t0
     by_level = "".join(f" L{l}={n}" for l, n in
                        sorted(tr.ledger.uplinks_by_level.items()))
@@ -107,10 +117,14 @@ def run_scale(args):
         cfg, scale,
         TrainerConfig(batch_per_replica=args.batch, seq_len=args.seq,
                       intervals=args.steps, eval_every=0,
-                      seed=args.seed),
+                      seed=args.seed, trace_dir=args.trace_dir,
+                      profile=args.profile),
         sync=args.sync, program=build_program(args, args.tau))
     t0 = time.time()
-    tr.init().run()
+    try:
+        tr.init().run()
+    finally:
+        tr.close()
     by_level = "".join(f" L{l}={n}" for l, n in
                        sorted(tr.ledger.uplinks_by_level.items()))
     print(f"intervals={tr.interval} wall={time.time() - t0:.1f}s "
@@ -130,6 +144,12 @@ def main(argv=None):
     ap.add_argument("--consensus-every", type=int, default=5)
     ap.add_argument("--lr", type=float, default=2e-3)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace-dir", default=None,
+                    help="observability dir (repro.obs): Chrome trace, "
+                         "metrics.jsonl telemetry, run manifest")
+    ap.add_argument("--profile", action="store_true",
+                    help="also wrap the run in jax.profiler.trace "
+                         "(written under <trace-dir>/jax_profile)")
     ap.add_argument("--scenario", default=None,
                     help="netsim dynamics scenario (see repro.netsim."
                          "scenarios; e.g. markov_links, device_churn)")

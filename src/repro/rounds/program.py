@@ -76,7 +76,14 @@ class Billing:
     uplink_delay_mults: Optional[np.ndarray] = None
 
     def charge(self, ledger, gamma_used: Optional[np.ndarray] = None):
-        """Apply this bill to a ledger (the one home for pricing)."""
+        """Apply this bill to a ledger (the one home for pricing).
+
+        One ``charge`` = one attribution event (``ledger.next_event``);
+        consensus repeats replay ``record_consensus`` per repeat so the
+        per-cluster attribution rows keep their cluster index (totals
+        are identical to the concatenated form they replace).
+        """
+        ledger.next_event()
         if self.local_devices:
             ledger.record_local_step(self.local_devices)
         if self.consensus_edges is not None and self.consensus_repeats:
@@ -84,12 +91,12 @@ class Billing:
                  else gamma_used)
             assert g is not None, \
                 "adaptive consensus billing needs the realized gamma_used"
-            tail = (list(self.consensus_tail) * self.consensus_repeats
-                    if self.consensus_tail is not None else None)
-            ledger.record_consensus(
-                list(g) * self.consensus_repeats,
-                list(self.consensus_edges) * self.consensus_repeats,
-                tail_mult_per_cluster=tail)
+            for _ in range(self.consensus_repeats):
+                ledger.record_consensus(
+                    list(g), list(self.consensus_edges),
+                    tail_mult_per_cluster=(
+                        list(self.consensus_tail)
+                        if self.consensus_tail is not None else None))
         if self.uplinks_by_level is not None:
             ledger.record_hierarchy_event(
                 self.uplinks_by_level,

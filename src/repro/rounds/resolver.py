@@ -26,6 +26,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs.sink import NULL_OBS
 from repro.rounds.program import (
     AggregationSpec, Billing, ConsensusSpec, RoundEvent, RoundProgram,
     ScaleRoundEvent)
@@ -75,6 +76,9 @@ class RoundResolver:
             self.tree = build_tree(self.hierarchy, net.num_clusters,
                                    net.cluster_size)
         self._edges = net.num_d2d_edges()
+        # observability sink (repro.obs): trainers hand in the run's
+        # sink; resolution spans/counters are free no-ops by default
+        self.obs = NULL_OBS
 
     # ------------------------------------------------------------------
     @classmethod
@@ -129,25 +133,31 @@ class RoundResolver:
         """
         algo = self.algo
         net = self.net
-        snap = self.tvnet.snapshot(t) if self.tvnet is not None else None
-        device_up = snap.device_up if snap is not None else None
-        active = (int(snap.device_up.sum()) if snap is not None
-                  else net.num_devices)
-        billing = Billing()
+        with self.obs.span("resolve", t=t):
+            snap = (self.tvnet.snapshot(t)
+                    if self.tvnet is not None else None)
+            device_up = snap.device_up if snap is not None else None
+            active = (int(snap.device_up.sum()) if snap is not None
+                      else net.num_devices)
+            billing = Billing()
 
-        consensus = None
-        if algo.is_consensus_step(t):
-            consensus = self._consensus_spec(snap)
-            billing.consensus_edges = consensus.edges
-            if snap is not None:
-                from repro.netsim import faults
-                billing.consensus_tail = faults.consensus_tail_mult(
-                    snap.delay_mult, snap.device_up, snap.adj)
+            consensus = None
+            if algo.is_consensus_step(t):
+                consensus = self._consensus_spec(snap)
+                billing.consensus_edges = consensus.edges
+                if snap is not None:
+                    from repro.netsim import faults
+                    billing.consensus_tail = faults.consensus_tail_mult(
+                        snap.delay_mult, snap.device_up, snap.adj)
 
-        aggregation = None
-        if algo.is_aggregation_step(t):
-            aggregation = self._sim_aggregation(t, k_agg, snap, billing)
+            aggregation = None
+            if algo.is_aggregation_step(t):
+                aggregation = self._sim_aggregation(t, k_agg, snap,
+                                                    billing)
 
+        self.obs.counter("resolver", active_devices=active,
+                         consensus=int(consensus is not None),
+                         aggregation=int(aggregation is not None))
         return RoundEvent(t=t, active_devices=active, device_up=device_up,
                           consensus=consensus, aggregation=aggregation,
                           billing=billing)
@@ -226,6 +236,17 @@ class RoundResolver:
         aggregation argument, the optional consensus-matrix refresh,
         and the interval's full bill (local steps × τ, the interval's
         ``τ // consensus_every`` consensus events, the uplinks)."""
+        with self.obs.span("resolve", interval=interval):
+            ev = self._resolve_interval(interval, kp)
+        self.obs.counter(
+            "resolver",
+            active_devices=ev.billing.local_devices // max(
+                self.scale.tau, 1),
+            refresh=int(ev.refresh is not None),
+            root_served=int(ev.root_served))
+        return ev
+
+    def _resolve_interval(self, interval: int, kp) -> ScaleRoundEvent:
         import jax.numpy as jnp
 
         from repro.core import sampling as smp

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import ModelApi
+from repro.obs.sink import NULL_OBS
 from repro.serving.sampling import sample_tokens
 
 
@@ -41,6 +42,33 @@ class Request:
     out_tokens: list = field(default_factory=list)
     done: bool = False
     budget: int = 0                 # set at admission
+    # lifecycle stamps in scheduler-step clock ticks (repro.obs §13);
+    # -1 = never happened (e.g. first_token of a zero-budget request)
+    submit_clock: int = -1
+    admit_clock: int = -1
+    first_token_clock: int = -1
+    retire_clock: int = -1
+
+
+@dataclass
+class RequestRecord:
+    """One retired request's latency breakdown, in step-clock ticks."""
+    rid: int
+    submit: int
+    admit: int
+    first_token: int
+    retire: int
+    decode: int                     # tokens generated
+    budget: int
+
+    @property
+    def queue_latency(self) -> int:
+        return self.admit - self.submit if self.admit >= 0 else -1
+
+    @property
+    def ttft(self) -> int:
+        return (self.first_token - self.submit
+                if self.first_token >= 0 else -1)
 
 
 @dataclass
@@ -51,6 +79,10 @@ class SchedulerStats:
     requests_done: int = 0
     slot_steps: int = 0             # slots * decode_steps
     live_slot_steps: int = 0        # slots actually generating
+    # one RequestRecord per retired request, in retirement order —
+    # run_trace returns stats, so per-request latencies ride along
+    # without changing any signature
+    records: list = field(default_factory=list)
 
     @property
     def utilization(self) -> float:
@@ -62,7 +94,8 @@ class _SchedulerBase:
 
     def __init__(self, model: ModelApi, *, slots: int = 4,
                  max_prompt: int = 64, max_total: int = 128,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 obs=NULL_OBS):
         assert max_prompt <= max_total
         if model.cfg.kind in ("vlm", "encdec", "audio"):
             raise ValueError(
@@ -78,9 +111,15 @@ class _SchedulerBase:
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
         self.stats = SchedulerStats()
+        self.obs = obs
+        # the step clock: one tick per step() call (admission attempts
+        # and decode steps alike) — all Request stamps use this clock
+        self.clock = 0
 
     def submit(self, req: Request) -> None:
         assert 1 <= len(req.prompt) <= self.max_prompt
+        if req.submit_clock < 0:
+            req.submit_clock = self.clock
         self.queue.append(req)
 
     @property
@@ -91,6 +130,16 @@ class _SchedulerBase:
         # the cache holds prompt + generated tokens: never decode past it
         return min(req.max_new, self.max_total - len(req.prompt))
 
+    def _retire(self, req: Request) -> None:
+        """Mark done, stamp the clock, append the latency record."""
+        req.done = True
+        req.retire_clock = self.clock
+        self.stats.requests_done += 1
+        self.stats.records.append(RequestRecord(
+            rid=req.rid, submit=req.submit_clock, admit=req.admit_clock,
+            first_token=req.first_token_clock, retire=req.retire_clock,
+            decode=len(req.out_tokens), budget=req.budget))
+
     def _take_next(self) -> Optional[Request]:
         """Pop the next admissible request; zero-budget requests (prompt
         already fills the cache) complete immediately with no tokens."""
@@ -98,9 +147,10 @@ class _SchedulerBase:
             req = self.queue.pop(0)
             req.budget = self._budget(req)
             if req.budget > 0:
+                req.admit_clock = self.clock
                 return req
-            req.done = True
-            self.stats.requests_done += 1
+            req.admit_clock = self.clock
+            self._retire(req)
         return None
 
     def _sample(self, logits) -> jnp.ndarray:
@@ -116,10 +166,11 @@ class _SchedulerBase:
             if r is None or r.done:
                 continue
             r.out_tokens.append(int(tok_np[i]))
+            if r.first_token_clock < 0:
+                r.first_token_clock = self.clock
             emitted += 1
             if len(r.out_tokens) >= r.budget:
-                r.done = True
-                self.stats.requests_done += 1
+                self._retire(r)
                 self.active[i] = None
         self.stats.tokens_generated += emitted
         return emitted
@@ -132,8 +183,9 @@ class _SchedulerBase:
         emitted = self._emit(np.asarray(tok)[:, 0])
         if not any(r is not None for r in self.active):
             return emitted
-        self._last_logits, self._cache = self._decode(
-            params, tok, self._cache, self._pos)
+        with self.obs.span("decode_step", step=self.clock):
+            self._last_logits, self._cache = self._decode(
+                params, tok, self._cache, self._pos)
         self._pos = self._pos + 1
         self.stats.decode_steps += 1
         self.stats.slot_steps += self.slots
@@ -141,12 +193,24 @@ class _SchedulerBase:
             r is not None for r in self.active)
         return emitted
 
+    def _tick(self) -> None:
+        """Advance the step clock + record the slot/queue gauges."""
+        self.clock += 1
+        if self.obs.enabled:
+            self.obs.counter(
+                "scheduler",
+                live_slots=sum(r is not None for r in self.active),
+                queue_depth=len(self.queue),
+                tokens=self.stats.tokens_generated)
+
     def run(self, params, max_steps: int = 1000) -> SchedulerStats:
         steps = 0
-        while self.outstanding and steps < max_steps:
-            if self.step(params) == 0 and not self.queue:
-                break
-            steps += 1
+        with self.obs.span("run", scheduler=type(self).__name__,
+                           slots=self.slots):
+            while self.outstanding and steps < max_steps:
+                if self.step(params) == 0 and not self.queue:
+                    break
+                steps += 1
         if self.outstanding:
             import warnings
             warnings.warn(
@@ -162,10 +226,11 @@ class BatchScheduler(_SchedulerBase):
 
     def __init__(self, model: ModelApi, *, slots: int = 4,
                  max_prompt: int = 64, max_total: int = 128,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 obs=NULL_OBS):
         super().__init__(model, slots=slots, max_prompt=max_prompt,
                          max_total=max_total, temperature=temperature,
-                         seed=seed)
+                         seed=seed, obs=obs)
         self._prefill = jax.jit(lambda p, b, l: model.prefill(
             p, b, dtype=jnp.float32, cache_dtype=jnp.float32,
             cache_len=max_total, lengths=l))
@@ -198,8 +263,10 @@ class BatchScheduler(_SchedulerBase):
             if r is not None:
                 toks[i, : len(r.prompt)] = r.prompt
                 lens[i] = len(r.prompt)
-        logits, cache, pos = self._prefill(
-            params, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens))
+        with self.obs.span("prefill", wave=self.stats.prefills,
+                           requests=int((lens > 0).sum())):
+            logits, cache, pos = self._prefill(
+                params, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens))
         self._cache = cache
         self._pos = pos             # (slots,) = per-request prompt length
         self._last_logits = logits
@@ -208,8 +275,12 @@ class BatchScheduler(_SchedulerBase):
 
     def step(self, params) -> int:
         """One decode step for all live slots; returns #tokens emitted."""
-        if self._cache is None and not self._admit(params):
-            return 0
+        self._tick()
+        if self._cache is None:
+            with self.obs.span("admission", step=self.clock):
+                admitted = self._admit(params)
+            if not admitted:
+                return 0
         emitted = self._decode_tick(params)
         if not any(r is not None for r in self.active):
             self._cache = None  # drained -> allow the next admission wave
@@ -227,10 +298,11 @@ class ContinuousScheduler(_SchedulerBase):
 
     def __init__(self, model: ModelApi, *, slots: int = 4,
                  max_prompt: int = 64, max_total: int = 128,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 obs=NULL_OBS):
         super().__init__(model, slots=slots, max_prompt=max_prompt,
                          max_total=max_total, temperature=temperature,
-                         seed=seed)
+                         seed=seed, obs=obs)
         cfg = model.cfg
         self._cache = model.init_cache(slots, max_total, jnp.float32)
         self._pos = jnp.zeros((slots,), jnp.int32)
@@ -265,18 +337,22 @@ class ContinuousScheduler(_SchedulerBase):
             self.active[i] = req
             toks = np.zeros((1, self.max_prompt), np.int32)
             toks[0, : len(req.prompt)] = req.prompt
-            self._cache, self._pos, self._last_logits = self._admit_one(
-                params, self._cache, self._pos, self._last_logits,
-                jnp.asarray(toks),
-                jnp.asarray([len(req.prompt)], jnp.int32),
-                jnp.asarray(i, jnp.int32))
+            with self.obs.span("prefill", slot=i, rid=req.rid):
+                self._cache, self._pos, self._last_logits = \
+                    self._admit_one(
+                        params, self._cache, self._pos,
+                        self._last_logits, jnp.asarray(toks),
+                        jnp.asarray([len(req.prompt)], jnp.int32),
+                        jnp.asarray(i, jnp.int32))
             self.stats.prefills += 1
             admitted += 1
         return admitted
 
     def step(self, params) -> int:
         """Admit into free slots, then one decode step for the batch."""
-        self._admit(params)
+        self._tick()
+        with self.obs.span("admission", step=self.clock):
+            self._admit(params)
         if not any(r is not None for r in self.active):
             return 0
         return self._decode_tick(params)
@@ -306,12 +382,15 @@ def run_trace(sched, params, arrivals, max_steps: int = 10_000):
     pending = sorted(arrivals, key=lambda a: a[0])
     i = 0
     steps = 0
-    while (i < len(pending) or sched.outstanding) and steps < max_steps:
-        while i < len(pending) and pending[i][0] <= steps:
-            sched.submit(pending[i][1])
-            i += 1
-        sched.step(params)
-        steps += 1
+    with sched.obs.span("run", scheduler=type(sched).__name__,
+                        driver="trace", requests=len(pending)):
+        while (i < len(pending) or sched.outstanding) and \
+                steps < max_steps:
+            while i < len(pending) and pending[i][0] <= steps:
+                sched.submit(pending[i][1])
+                i += 1
+            sched.step(params)
+            steps += 1
     if i < len(pending) or sched.outstanding:
         import warnings
         warnings.warn(

@@ -13,6 +13,11 @@ from typing import Any, Optional
 
 
 class MetricLogger:
+    """Usable bare or as a context manager (closes the JSONL handle);
+    ``window`` sizes the smoothing ring. This is also the JSONL sink
+    behind :class:`repro.obs.sink.Observability` — every record kind
+    (train / theory / comm / serve) shares one stream."""
+
     def __init__(self, out_path: Optional[str] = None,
                  console_every: int = 1, window: int = 100):
         self.out = Path(out_path) if out_path else None
@@ -22,6 +27,7 @@ class MetricLogger:
         else:
             self._fh = None
         self.console_every = console_every
+        self.window = int(window)
         self._recent: dict[str, deque] = {}
         self._t0 = time.time()
         self._n = 0
@@ -32,7 +38,8 @@ class MetricLogger:
             v = float(v) if hasattr(v, "__float__") else v
             rec[k] = v
             if isinstance(v, float):
-                self._recent.setdefault(k, deque(maxlen=100)).append(v)
+                self._recent.setdefault(
+                    k, deque(maxlen=self.window)).append(v)
         if self._fh:
             self._fh.write(json.dumps(rec) + "\n")
             self._fh.flush()
@@ -50,3 +57,10 @@ class MetricLogger:
     def close(self) -> None:
         if self._fh:
             self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "MetricLogger":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

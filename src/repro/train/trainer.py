@@ -32,6 +32,7 @@ from repro.core.energy import CommLedger
 from repro.core.mixing import build_mixing_plan
 from repro.data.tokens import synthetic_token_batches
 from repro.models import ModelApi, build_model
+from repro.obs.sink import make_obs
 from repro.rounds import RoundProgram, RoundResolver
 from repro.train.metrics import MetricLogger
 from repro.train.prefetch import PrefetchLoader
@@ -61,6 +62,11 @@ class TrainerConfig:
                                     # SGD+consensus block-ends
     prefetch: bool = True           # build/transfer interval k+1's
                                     # batch while interval k computes
+    # observability (repro.obs, DESIGN.md §13): a trace dir turns on
+    # the span tracer + theory-bound telemetry stream + run manifest;
+    # profile additionally wraps the run in jax.profiler.trace
+    trace_dir: Optional[str] = None
+    profile: bool = False
 
     def __post_init__(self):
         if self.dtype not in _DTYPES:
@@ -131,6 +137,20 @@ class ScaleTrainer:
             lambda p, b: self.model.loss(p, b, dtype=dtype, remat=False))
         self.ledger = CommLedger()
         self.metrics = MetricLogger(tcfg.log_path)
+        # observability sink (NULL_OBS when trace_dir unset): spans,
+        # theory-bound telemetry, manifest. Probes are built lazily at
+        # init() (they need the materialized params) and are read-only
+        # — instrumented trajectories are bitwise the uninstrumented
+        # ones (tests/test_obs.py).
+        self.obs = make_obs(
+            tcfg.trace_dir, profile=tcfg.profile, run_name="train-scale",
+            config={"model": cfg, "scale": scale, "trainer": tcfg},
+            extra={"arch": cfg.name, "sync": sync})
+        self._resolver.obs = self.obs
+        self._obs_probe = None
+        self._obs_grad_probe = None
+        self._obs_gauges = None
+        self._obs_gen = None        # dedicated grad-probe batch stream
         self.key = jax.random.PRNGKey(tcfg.seed)
         self._make_gens()
         # resume fidelity: batches drawn so far from every train
@@ -207,23 +227,111 @@ class ScaleTrainer:
                 g, {k: jnp.asarray(v) for k, v in b.items()})))
         return float(np.mean(losses))
 
+    # ------------------------------------------------------------------
+    # observability (DESIGN.md §13)
+    # ------------------------------------------------------------------
+    def _ensure_obs(self):
+        from repro.obs.telemetry import (
+            TheoryGauges, default_constants, make_divergence_probe,
+            make_scale_grad_probe)
+
+        if self._obs_probe is not None:
+            return
+        self._obs_probe = make_divergence_probe(
+            self.scale.num_clusters, self.scale.cluster_size,
+            self.net.varrho)
+        self._obs_grad_probe = make_scale_grad_probe(
+            self.model, _DTYPES[self.tcfg.dtype])
+        # a dedicated probe stream: grad-norm batches never touch the
+        # train/eval draws, so the data trajectory is unchanged
+        self._obs_gen = synthetic_token_batches(
+            self.tcfg.batch_per_replica, self.tcfg.seq_len,
+            self.cfg.vocab_size, seed=self.tcfg.seed + 20_000,
+            shard_id=98)
+        model_dim = int(sum(np.prod(l.shape) for l in
+                            jax.tree.leaves(self._replica0())))
+        self._obs_gauges = TheoryGauges(
+            constants=default_constants(float(np.min(self.net.varrho))),
+            tau=self.scale.tau, model_dim=model_dim, lr=self.scale.lr)
+
+    def _emit_interval_telemetry(self, loss, ledger_mark):
+        """One fenced drain per interval: block on the step's loss, run
+        the jitted probe over the (donated-output) params, and emit
+        measured divergence + theory gauges + comms attribution into
+        the shared JSONL stream. ``self.interval`` is still the 0-based
+        index of the interval that just ran."""
+        obs = self.obs
+        jax.block_until_ready(loss)
+        aux = {k: np.asarray(v)
+               for k, v in self._obs_probe(self.params).items()}
+        tau = self.scale.tau
+        t = (self.interval + 1) * tau
+        rec = {"train_loss": float(loss), **aux}
+        rec.update(self._obs_gauges.round_gauges(t, t - tau))
+        if self.scale.consensus_every:
+            N = self.scale.num_clusters
+            rec["gamma_used"] = np.full((N,), self.scale.gamma_d2d)
+            rec["lemma1_bound"] = self._obs_gauges.lemma1(
+                self.net.lambdas, rec["gamma_used"],
+                self.scale.cluster_size, aux["upsilon"])
+        obs.emit("round", self.interval + 1, **rec)
+        rows = self.ledger.attribution_since(ledger_mark)
+        if rows:
+            up_lv, d2d_cl = {}, {}
+            ups = msgs = rounds = 0
+            for r in rows:
+                if r["kind"] == "uplink":
+                    ups += r["n"]
+                    up_lv[r["level"]] = up_lv.get(r["level"], 0) + r["n"]
+                elif r["kind"] == "consensus":
+                    msgs += r["msgs"]
+                    rounds += r["rounds"]
+                    c = r["cluster"]
+                    d2d_cl[c] = d2d_cl.get(c, 0) + r["msgs"]
+            obs.emit("comm", self.interval + 1, uplinks=ups,
+                     uplinks_by_level=up_lv, d2d_msgs=msgs,
+                     d2d_rounds=rounds, d2d_msgs_by_cluster=d2d_cl,
+                     event=self.ledger._event_idx)
+        obs.counter("ledger", uplinks=self.ledger.uplinks,
+                    d2d_msgs=self.ledger.d2d_msgs,
+                    local_steps=self.ledger.local_steps)
+
     def _interval(self, batch, kp):
         """ONE interval for every scenario: the resolver supplies the
         step's aggregation argument (picks / (N, s) weight matrix /
         composed (R, R) device matrix — whichever form the step was
         built for), the optional per-aggregation-round consensus-matrix
         refresh, and the interval's full bill."""
+        obs = self.obs
+        ledger_mark = len(self.ledger.events)
         ev = self._resolver.resolve_interval(self.interval, kp)
         args = (self.params, batch, ev.agg, jnp.asarray(self.interval))
-        if ev.refresh is not None:
-            self.params, loss = self._step(*args, ev.refresh)
-        else:
-            self.params, loss = self._step(*args)
+        with obs.span("interval", interval=self.interval,
+                      tau=self.scale.tau):
+            if ev.refresh is not None:
+                self.params, loss = self._step(*args, ev.refresh)
+            else:
+                self.params, loss = self._step(*args)
+            if obs.enabled:
+                jax.block_until_ready(loss)
         if ev.root_served:
             # a live root event just broadcast the root model to every
             # replica — snapshot it as the served global model
             self._global = self._replica0()
         ev.billing.charge(self.ledger)
+        if obs.enabled:
+            # the jitted interval folds its consensus/aggregation
+            # events into one dispatch — mark them as instants so the
+            # trace still shows the two timescales
+            if ev.billing.consensus_repeats and \
+                    ev.billing.consensus_edges is not None:
+                obs.instant("consensus_event", interval=self.interval,
+                            repeats=ev.billing.consensus_repeats)
+            if ev.billing.uplinks_by_level:
+                obs.instant("aggregation", interval=self.interval,
+                            uplinks_by_level=ev.billing.uplinks_by_level,
+                            root_served=ev.root_served)
+            self._emit_interval_telemetry(loss, ledger_mark)
         return loss
 
     def save(self, path: Optional[str] = None):
@@ -239,7 +347,7 @@ class ScaleTrainer:
             "eval_draws": np.asarray(self._eval_draws),
             "ledger": {k: np.asarray(v) for k, v in
                        dataclasses.asdict(self.ledger).items()
-                       if not isinstance(v, dict)},
+                       if not isinstance(v, (dict, list))},
             "uplinks_by_level": {
                 str(k): np.asarray(v)
                 for k, v in self.ledger.uplinks_by_level.items()},
@@ -283,6 +391,9 @@ class ScaleTrainer:
     def run(self, intervals: Optional[int] = None):
         if self.params is None:
             self.init()
+        obs = self.obs
+        if obs.enabled:
+            self._ensure_obs()
         n = intervals if intervals is not None else self.tcfg.intervals
         loader = None
         if self.tcfg.prefetch and n > 1:
@@ -291,26 +402,44 @@ class ScaleTrainer:
             # checkpoint never includes the in-flight prefetched batch
             loader = PrefetchLoader(self._build_interval_batch, depth=1)
         try:
-            for _ in range(n):
-                if loader is not None:
-                    batch = loader.get()
-                    self._train_draws += self.scale.tau
-                else:
-                    batch = self._interval_batch()
-                self.key, kp = jax.random.split(self.key)
-                loss = self._interval(batch, kp)
-                self.interval += 1
-                logs = {"train_loss": float(loss),
-                        "uplinks": self.ledger.uplinks,
-                        "d2d_msgs": self.ledger.d2d_msgs}
-                if self.tcfg.eval_every and \
-                        self.interval % self.tcfg.eval_every == 0:
-                    logs["eval_loss"] = self.evaluate()
-                self.metrics.log(self.interval, **logs)
-                if self.tcfg.ckpt_every and \
-                        self.interval % self.tcfg.ckpt_every == 0:
-                    self.save()
+            with obs.span("run", intervals=n, tau=self.scale.tau,
+                          replicas=self.scale.replicas):
+                for _ in range(n):
+                    with obs.span("round", interval=self.interval):
+                        if loader is not None:
+                            batch = loader.get()
+                            self._train_draws += self.scale.tau
+                        else:
+                            batch = self._interval_batch()
+                        self.key, kp = jax.random.split(self.key)
+                        loss = self._interval(batch, kp)
+                        self.interval += 1
+                        logs = {"train_loss": float(loss),
+                                "uplinks": self.ledger.uplinks,
+                                "d2d_msgs": self.ledger.d2d_msgs}
+                        if self.tcfg.eval_every and \
+                                self.interval % self.tcfg.eval_every == 0:
+                            with obs.span("eval", interval=self.interval):
+                                logs["eval_loss"] = self.evaluate()
+                            if obs.enabled:
+                                b = {k: jnp.asarray(v) for k, v in
+                                     next(self._obs_gen).items()}
+                                logs["grad_norm"] = float(
+                                    self._obs_grad_probe(
+                                        self._global_params(), b))
+                                obs.emit("eval", self.interval, **logs)
+                        self.metrics.log(self.interval, **logs)
+                        if self.tcfg.ckpt_every and \
+                                self.interval % self.tcfg.ckpt_every == 0:
+                            self.save()
         finally:
             if loader is not None:
                 loader.close()
+            obs.flush()
         return self
+
+    def close(self):
+        """Flush + close the metric and observability sinks (exports
+        the Chrome trace when a trace dir is set)."""
+        self.metrics.close()
+        self.obs.close()

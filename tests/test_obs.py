@@ -1,0 +1,435 @@
+"""Observability (repro.obs, DESIGN.md §13).
+
+The §13 contract, enforced:
+
+* span nesting + Chrome-trace export round-trips through the schema
+  validator the CI obs-smoke job uses;
+* an instrumented run is BITWISE the uninstrumented run (probes are
+  separate read-only jitted functions — sim and scale mode);
+* the theory gauges in the stream equal direct ``core/theory.py``
+  calls (including the general-η Σ_t against the closed form);
+* ledger attribution rows re-sum to exactly the counters pricing
+  reads, per cluster / per level / per event;
+* scheduler request records are complete and internally consistent;
+* MetricLogger honours ``window`` and closes its JSONL handle.
+"""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.energy import CommLedger
+from repro.obs.manifest import config_hash, write_manifest
+from repro.obs.sink import NULL_OBS, make_obs
+from repro.obs.trace import Tracer, validate_chrome_trace
+from repro.rounds import Billing
+
+
+# ===========================================================================
+# tracer
+# ===========================================================================
+
+def test_span_nesting_and_export_roundtrip(tmp_path):
+    tr = Tracer()
+    with tr.span("run", intervals=2):
+        with tr.span("round", interval=0):
+            with tr.span("interval", tau=4):
+                pass
+            tr.instant("consensus_event", repeats=2)
+            tr.counter("ledger", uplinks=3, d2d_msgs=12)
+    path = tr.export(str(tmp_path / "trace.json"))
+    doc = json.loads(Path(path).read_text())
+    assert validate_chrome_trace(doc) == []
+    evs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    by_name = {e["name"]: e for e in evs}
+    assert set(by_name) == {"run", "round", "interval"}
+    # nesting: child spans start no earlier and end no later
+    for outer, inner in (("run", "round"), ("round", "interval")):
+        o, i = by_name[outer], by_name[inner]
+        assert o["ts"] <= i["ts"]
+        assert o["ts"] + o["dur"] >= i["ts"] + i["dur"]
+    kinds = {e["ph"] for e in doc["traceEvents"]}
+    assert {"X", "i", "C", "M"} <= kinds
+    # args survive the round trip
+    assert by_name["run"]["args"]["intervals"] == 2
+
+
+def test_instant_does_not_deadlock_or_malform():
+    tr = Tracer()
+    for _ in range(3):
+        tr.instant("aggregation", uplinks_by_level={1: 4})
+    assert len(tr.events) == 3
+    assert all(e["ph"] == "i" for e in tr.events)
+
+
+def test_validator_flags_malformed():
+    assert validate_chrome_trace({}) == ["missing traceEvents"]
+    bad = {"traceEvents": [{"ph": "X", "pid": 1, "name": "x", "ts": 0.0,
+                            "dur": -1.0},
+                           {"ph": "i"}]}
+    probs = validate_chrome_trace(bad)
+    assert any("negative dur" in p for p in probs)
+    assert any("missing 'name'" in p for p in probs)
+
+
+# ===========================================================================
+# manifest + sink lifecycle
+# ===========================================================================
+
+def test_manifest_and_sink_artifacts(tmp_path):
+    d = tmp_path / "obs"
+    obs = make_obs(str(d), run_name="t", config={"a": 1, "b": [2, 3]},
+                   extra={"arch": "x"})
+    assert obs.enabled
+    obs.emit("round", 1, loss=1.5, vec=np.arange(3))
+    with obs.span("run"):
+        obs.counter("c", v=1)
+    obs.close()
+    man = json.loads((d / "manifest.json").read_text())
+    for key in ("config_hash", "git_sha", "mesh", "unix_ts", "argv"):
+        assert key in man, key
+    assert man["arch"] == "x"
+    assert man["config_hash"] == config_hash({"a": 1, "b": [2, 3]})
+    assert config_hash({"b": [2, 3], "a": 1}) == man["config_hash"]
+    recs = [json.loads(l) for l in
+            (d / "metrics.jsonl").read_text().splitlines()]
+    assert recs[0]["kind"] == "round" and recs[0]["vec"] == [0, 1, 2]
+    doc = json.loads((d / "trace.json").read_text())
+    assert validate_chrome_trace(doc) == []
+
+
+def test_null_obs_is_free_and_silent(tmp_path):
+    assert make_obs(None) is NULL_OBS
+    assert not NULL_OBS.enabled
+    with NULL_OBS.span("x", a=1) as o:
+        o.emit("round", 0, loss=1.0)
+        o.instant("e")
+        o.counter("c", v=2)
+    NULL_OBS.flush()
+    NULL_OBS.close()
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_write_manifest_without_config(tmp_path):
+    p = write_manifest(str(tmp_path))
+    man = json.loads(Path(p).read_text())
+    assert man["config_hash"] is None and man["git_sha"]
+
+
+# ===========================================================================
+# MetricLogger fixes
+# ===========================================================================
+
+def test_metric_logger_window_respected(tmp_path):
+    from repro.train.metrics import MetricLogger
+    ml = MetricLogger(str(tmp_path / "m.jsonl"), console_every=0,
+                      window=5)
+    for i in range(20):
+        ml.log(i, loss=float(i))
+    assert len(ml._recent["loss"]) == 5               # not 100
+    assert ml.smoothed("loss") == np.mean(range(15, 20))
+    ml.close()
+    assert ml._fh is None
+    ml.close()                                        # idempotent
+
+
+def test_metric_logger_context_manager(tmp_path):
+    from repro.train.metrics import MetricLogger
+    with MetricLogger(str(tmp_path / "m.jsonl"), console_every=0) as ml:
+        ml.log(0, loss=1.0)
+        fh = ml._fh
+        assert fh is not None
+    assert ml._fh is None
+    recs = [json.loads(l) for l in
+            (tmp_path / "m.jsonl").read_text().splitlines()]
+    assert recs == [{"step": 0, "wall_s": recs[0]["wall_s"], "loss": 1.0}]
+
+
+# ===========================================================================
+# ledger attribution
+# ===========================================================================
+
+def test_attribution_rows_resum_to_counters():
+    led = CommLedger()
+    led.next_event()
+    led.record_consensus([2, 0, 3], [4, 5, 2])
+    led.record_hierarchy_event({1: 6, 2: 2})
+    led.next_event()
+    led.record_consensus([1, 1, 1], [4, 5, 2])
+    led.record_aggregation(5)
+    tot = led.attribution_totals()
+    assert tot["uplinks"] == led.uplinks == 13
+    assert tot["broadcasts"] == led.broadcasts == 2
+    assert tot["d2d_msgs"] == led.d2d_msgs
+    assert tot["d2d_rounds"] == led.d2d_rounds == 8
+    assert tot["uplinks_by_level"] == led.uplinks_by_level == {1: 11, 2: 2}
+    by_cl = led.d2d_by_cluster()
+    assert sum(d["msgs"] for d in by_cl.values()) == led.d2d_msgs
+    assert sum(d["rounds"] for d in by_cl.values()) == led.d2d_rounds
+    # cluster 1 had 0 rounds in event 1, 1 round in event 2
+    assert by_cl[1] == {"rounds": 1, "msgs": 2 * 5}
+    assert sum(led.uplinks_by_event().values()) == led.uplinks
+
+
+def test_billing_repeats_keep_cluster_index():
+    led = CommLedger()
+    bill = Billing(consensus_gammas=np.array([2, 1]),
+                   consensus_edges=np.array([3, 4]),
+                   consensus_repeats=3)
+    bill.charge(led)
+    # totals: 3 repeats x per-cluster (g * 2 * e)
+    assert led.d2d_msgs == 3 * (2 * 2 * 3 + 1 * 2 * 4)
+    assert led.d2d_rounds == 3 * 3
+    by_cl = led.d2d_by_cluster()
+    assert set(by_cl) == {0, 1}                       # never i % (N*repeats)
+    assert by_cl[0]["msgs"] == 3 * 2 * 2 * 3
+    assert by_cl[1]["msgs"] == 3 * 1 * 2 * 4
+    assert all(r["event"] == 1 for r in led.events)
+
+
+def test_attribution_since_is_a_delta():
+    led = CommLedger()
+    led.next_event()
+    led.record_consensus([1], [2])
+    mark = len(led.events)
+    led.next_event()
+    led.record_aggregation(3)
+    delta = led.attribution_since(mark)
+    assert {r["kind"] for r in delta} == {"uplink", "broadcast"}
+    assert all(r["event"] == 2 for r in delta)
+
+
+def test_checkpoint_ledger_filter_skips_rows():
+    import dataclasses
+    led = CommLedger()
+    led.next_event()
+    led.record_consensus([1], [2])
+    persisted = {k: np.asarray(v) for k, v in
+                 dataclasses.asdict(led).items()
+                 if not isinstance(v, (dict, list))}
+    assert "events" not in persisted and "uplinks_by_level" not in persisted
+    assert int(persisted["d2d_msgs"]) == led.d2d_msgs
+
+
+# ===========================================================================
+# theory gauges vs direct core/theory.py calls
+# ===========================================================================
+
+def test_gauges_match_theory_module():
+    from repro.core.theory import (
+        ProblemConstants, dispersion_bound, lemma1_bound, sigma_t)
+    from repro.obs.telemetry import TheoryGauges, sigma_t_general
+
+    k = ProblemConstants(mu=1.0, beta=2.0, sigma=0.5, delta=0.3,
+                         varrho_min=0.2)
+    g = TheoryGauges(constants=k, tau=5, model_dim=42, phi=1.5,
+                     gamma=0.8, alpha=3.0)
+    t, t_prev = 12, 10
+    assert g.sigma(t, t_prev) == sigma_t(k, 0.8, 3.0, 5, t, t_prev)
+    out = g.round_gauges(t, t_prev)
+    eps0 = (0.8 / (t + 3.0)) * 1.5
+    assert out["eps0"] == pytest.approx(eps0)
+    assert out["dispersion_bound"] == pytest.approx(
+        dispersion_bound(k, 0.8, 3.0, 5, t, t_prev, eps0))
+    lam, gam, ups = [0.5, 0.7], [2, 3], [1.1, 0.4]
+    got = g.lemma1(lam, gam, 4, ups)
+    want = [lemma1_bound(lam[c], gam[c], 4, ups[c], 42)
+            for c in range(2)]
+    np.testing.assert_allclose(got, want)
+    # the general-η Σ_t equals the closed form on the decaying schedule
+    assert sigma_t_general(k.beta, lambda j: 0.8 / (j + 3.0), t, t_prev) \
+        == pytest.approx(sigma_t(k, 0.8, 3.0, 5, t, t_prev), rel=1e-12)
+
+
+def test_gauges_schedule_xor():
+    from repro.core.theory import ProblemConstants
+    from repro.obs.telemetry import TheoryGauges
+    k = ProblemConstants(1, 1, 1, 1, 0.2)
+    with pytest.raises(AssertionError):
+        TheoryGauges(constants=k, tau=2, model_dim=3)        # neither
+    with pytest.raises(AssertionError):
+        TheoryGauges(constants=k, tau=2, model_dim=3,
+                     gamma=1.0, alpha=1.0, lr=0.1)           # both
+
+
+def test_divergence_probe_matches_reference():
+    from repro.core.consensus import consensus_error, divergence_upsilon
+    from repro.obs.telemetry import make_divergence_probe
+
+    N, s, d = 3, 4, 7
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(N * s, d)).astype(np.float32)
+    varrho = np.full((N,), 1.0 / N, np.float32)
+    probe = make_divergence_probe(N, s, varrho)
+    out = {k: np.asarray(v) for k, v in probe(jnp.asarray(w)).items()}
+    z = jnp.asarray(w.reshape(N, s, d))
+    np.testing.assert_allclose(out["upsilon"],
+                               np.asarray(divergence_upsilon(z)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(out["consensus_err"],
+                               np.asarray(consensus_error(z)), rtol=1e-5)
+    e = w.reshape(N, s, d) - w.reshape(N, s, d).mean(1, keepdims=True)
+    np.testing.assert_allclose(
+        out["mix_residual"],
+        np.sqrt((e ** 2).sum(-1).max(1)), rtol=1e-5)
+    assert out["param_norm"] == pytest.approx(np.linalg.norm(w), rel=1e-5)
+
+
+# ===========================================================================
+# instrumented == uninstrumented, and the stream is complete (sim mode)
+# ===========================================================================
+
+@pytest.fixture(scope="module")
+def sim_world():
+    from repro.configs import TopologyConfig, TTHFConfig
+    from repro.data import fashion_synth, partition_noniid_labels
+    from repro.models import make_sim_model
+
+    x, y = fashion_synth(num_points=400, seed=0)
+    data = partition_noniid_labels(x, y, num_devices=8,
+                                   labels_per_device=3, seed=0)
+    topo = TopologyConfig(num_devices=8, num_clusters=2,
+                          graph="geometric", seed=0)
+    svm = make_sim_model("svm", data.feature_dim, data.num_classes)
+    algo = TTHFConfig(tau=4, consensus_every=2, gamma_d2d=2,
+                      constant_lr=0.01)
+    return data, topo, svm, algo
+
+
+def _sim_run(sim_world, obs=None):
+    from repro.core import TTHFTrainer
+    data, topo, svm, algo = sim_world
+    tr = TTHFTrainer(svm, data, topo, algo, batch_size=8)
+    st, _ = tr.run(steps=8, seed=0, eval_every=4, obs=obs)
+    return st, tr
+
+
+def test_sim_bitwise_parity_and_single_stream(sim_world, tmp_path):
+    st0, _ = _sim_run(sim_world)
+    obs = make_obs(str(tmp_path / "obs"), run_name="sim")
+    st1, tr1 = _sim_run(sim_world, obs=obs)
+    obs.close()
+    for a, b in zip(jax.tree.leaves(st0.params),
+                    jax.tree.leaves(st1.params)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+    recs = [json.loads(l) for l in
+            (tmp_path / "obs" / "metrics.jsonl").read_text().splitlines()]
+    rounds = {r["step"]: r for r in recs if r.get("kind") == "round"}
+    comms = {r["step"]: r for r in recs if r.get("kind") == "comm"}
+    # the acceptance-criteria join: ONE stream carries, for the same
+    # round, measured per-cluster divergence + Lemma 1 + sigma_t +
+    # attributed comms
+    joined = [s for s in rounds
+              if "lemma1_bound" in rounds[s] and s in comms]
+    assert joined, (sorted(rounds), sorted(comms))
+    s = joined[0]
+    r = rounds[s]
+    assert len(r["upsilon"]) == 2                       # per-cluster
+    assert len(r["lemma1_bound"]) == 2
+    assert "sigma_t" in r and "dispersion_bound" in r
+    assert comms[s]["d2d_msgs"] > 0
+    assert sum(comms[s]["d2d_msgs_by_cluster"].values()) \
+        == comms[s]["d2d_msgs"]
+    # comm deltas over the stream re-sum to the ledger totals
+    assert sum(c["d2d_msgs"] for c in comms.values()) \
+        == tr1.ledger.d2d_msgs
+    assert sum(c["uplinks"] for c in comms.values()) == tr1.ledger.uplinks
+
+    doc = json.loads((tmp_path / "obs" / "trace.json").read_text())
+    assert validate_chrome_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"run", "round", "interval", "resolve"} <= names
+
+
+# ===========================================================================
+# scale mode: trace_dir through TrainerConfig, parity included
+# ===========================================================================
+
+def _scale_trainer(trace_dir=None):
+    from repro.configs import get_arch
+    from repro.core.distributed import TTHFScaleConfig
+    from repro.train import ScaleTrainer, TrainerConfig
+
+    cfg = get_arch("qwen1.5-0.5b").reduced(num_layers=1, d_model=32,
+                                           d_ff=64, vocab_size=128)
+    scale = TTHFScaleConfig(replicas=4, cluster_size=2, tau=2,
+                            consensus_every=1, gamma_d2d=1, lr=0.05)
+    tcfg = TrainerConfig(batch_per_replica=2, seq_len=8, intervals=2,
+                         eval_every=0, prefetch=False,
+                         trace_dir=trace_dir)
+    return ScaleTrainer(cfg, scale, tcfg).init()
+
+
+def test_scale_trainer_obs_smoke_and_parity(tmp_path):
+    tr0 = _scale_trainer()
+    tr0.run()
+    tr1 = _scale_trainer(str(tmp_path / "obs"))
+    tr1.run()
+    tr1.close()
+    for a, b in zip(jax.tree.leaves(tr0.params),
+                    jax.tree.leaves(tr1.params)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    d = tmp_path / "obs"
+    assert (d / "manifest.json").exists()
+    recs = [json.loads(l) for l in
+            (d / "metrics.jsonl").read_text().splitlines()]
+    kinds = {r.get("kind") for r in recs}
+    assert {"round", "comm"} <= kinds
+    doc = json.loads((d / "trace.json").read_text())
+    assert validate_chrome_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"run", "round", "interval", "consensus_event"} <= names
+
+
+# ===========================================================================
+# serving: per-request records
+# ===========================================================================
+
+def test_scheduler_request_records(tmp_path):
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serving.scheduler import (
+        Request, make_scheduler, run_trace)
+
+    cfg = get_arch("qwen1.5-0.5b").reduced(num_layers=1, d_model=32,
+                                           d_ff=64, vocab_size=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    obs = make_obs(str(tmp_path / "obs"), run_name="serve")
+    sched = make_scheduler("continuous", model, slots=2, max_prompt=8,
+                           max_total=8, temperature=0.0, seed=0, obs=obs)
+    rng = np.random.default_rng(0)
+    arrivals = [(i, Request(rid=i,
+                            prompt=rng.integers(1, 250, size=4).astype(
+                                np.int32),
+                            max_new=3)) for i in range(3)]
+    # a zero-budget request: prompt fills the whole cache -> retires at
+    # admission with no tokens
+    arrivals.append((0, Request(
+        rid=99, prompt=rng.integers(1, 250, size=8).astype(np.int32),
+        max_new=3)))
+    stats = run_trace(sched, params, arrivals)
+    obs.close()
+
+    assert stats.requests_done == 4
+    assert len(stats.records) == 4
+    by_rid = {r.rid: r for r in stats.records}
+    zb = by_rid[99]
+    assert zb.decode == 0 and zb.budget == 0
+    assert zb.first_token == -1 and zb.ttft == -1
+    assert zb.retire == zb.admit
+    for r in stats.records:
+        if r.rid == 99:
+            continue
+        assert 0 <= r.submit <= r.admit <= r.first_token <= r.retire
+        assert r.decode == min(r.budget, 3)
+        assert r.queue_latency == r.admit - r.submit
+    assert sum(r.decode for r in stats.records) == stats.tokens_generated
+    doc = json.loads((tmp_path / "obs" / "trace.json").read_text())
+    assert validate_chrome_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"run", "admission", "prefill", "decode_step"} <= names

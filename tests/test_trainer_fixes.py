@@ -131,8 +131,15 @@ def test_resume_equals_straight_through_run(tmp_path, tiny_cfg):
     for a, b in zip(jax.tree.leaves(straight.params),
                     jax.tree.leaves(resumed.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    assert dataclasses.asdict(straight.ledger) == \
-        dataclasses.asdict(resumed.ledger)
+    # everything pricing reads must match exactly; the DESIGN.md §13
+    # attribution ROWS deliberately don't travel in checkpoints (only
+    # the counters + event cursor do), so the resumed ledger holds just
+    # its post-resume rows — tagged with the right event indices
+    sd = dataclasses.asdict(straight.ledger)
+    rd = dataclasses.asdict(resumed.ledger)
+    s_rows, r_rows = sd.pop("events"), rd.pop("events")
+    assert sd == rd
+    assert r_rows == s_rows[-len(r_rows):]
 
     # in-process rollback: restoring into a trainer whose generators
     # have already advanced must rebuild the streams, not double-skip
