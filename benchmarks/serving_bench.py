@@ -8,10 +8,20 @@ freed slots are re-prefilled while the rest of the batch keeps
 decoding, instead of idling until the wave drains.
 
   PYTHONPATH=src python -m benchmarks.serving_bench
+  PYTHONPATH=src python -m benchmarks.serving_bench --sharded
+
+``--sharded`` additionally times the continuous scheduler on a
+(data=2, model=4) mesh of 8 simulated host devices against the same
+single-device trace (DESIGN.md §14). It runs in a subprocess because
+the forced device count must be set before jax initializes.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -39,7 +49,7 @@ def _reduced_cfg(name):
 
 def _trace(rng, n_req, max_prompt, gap):
     """Poisson arrivals with mixed prompt lengths and budgets."""
-    from repro.serving.scheduler import Request
+    from repro.serving import Request
     arrivals, step = [], 0
     for rid in range(n_req):
         plen = int(rng.integers(max(2, max_prompt // 4), max_prompt + 1))
@@ -53,7 +63,7 @@ def _trace(rng, n_req, max_prompt, gap):
 def run(scale: str = "ci", seed: int = 0):
     import jax
     from repro.models import build_model
-    from repro.serving.scheduler import make_scheduler, run_trace
+    from repro.serving import make_scheduler, run_trace
 
     n_req = 12 if scale == "ci" else 48
     slots, max_prompt, max_total = 4, 16, 48
@@ -100,6 +110,93 @@ def run(scale: str = "ci", seed: int = 0):
     return rows
 
 
+SHARDED_KINDS = ("dense", "ssm")
+SHARDED_MESH = "2x4"        # data=2, model=4 over 8 forced host devices
+SHARDED_NDEV = 8
+
+
+def _run_sharded_child(scale: str, seed: int):
+    """Child entry: runs under XLA_FLAGS forcing 8 host devices. Times
+    the same continuous-batching trace single-device and on the
+    (data, model) mesh, printing one JSON line the parent parses."""
+    import jax
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import build_model
+    from repro.serving import make_scheduler, run_trace, shard_params
+
+    n_req = 12 if scale == "ci" else 48
+    slots, max_prompt, max_total = 4, 16, 48
+    out = []
+    for kind in SHARDED_KINDS:
+        cfg = _reduced_cfg(ARCH_BY_KIND[kind])
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        for spec in (None, SHARDED_MESH):
+            mesh = make_serve_mesh(spec) if spec else None
+            p = shard_params(params, model, mesh) if mesh else params
+            rng = np.random.default_rng(seed)     # identical trace
+            arrivals = _trace(rng, n_req, max_prompt, gap=1.0)
+            sched = make_scheduler("continuous", model, slots=slots,
+                                   max_prompt=max_prompt,
+                                   max_total=max_total, temperature=0.0,
+                                   seed=seed, mesh=mesh)
+            t0 = time.time()
+            stats = run_trace(sched, p, arrivals)
+            dt = time.time() - t0
+            assert stats.requests_done == n_req, (kind, spec, stats)
+            out.append({
+                "kind": kind, "mesh": spec or "single",
+                "devices": 1 if mesh is None else int(mesh.devices.size),
+                "wall_s": dt, "decode_steps": stats.decode_steps,
+                "tokens": stats.tokens_generated,
+                "util": stats.utilization})
+    print(json.dumps(out))
+
+
+def run_sharded(scale: str = "ci", seed: int = 0):
+    """Parent entry for ``--sharded``: fork a child with the forced
+    host device count, parse its JSON, append rows to BENCH_serving."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count="
+                        + str(SHARDED_NDEV))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_bench",
+         "--child-sharded", "--scale", scale, "--seed", str(seed)],
+        capture_output=True, text=True, timeout=1800, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded child failed:\n{out.stderr[-2000:]}")
+    recs = json.loads(out.stdout.splitlines()[-1])
+    rows = []
+    for r in recs:
+        rows.append(Row(
+            f"serving/sharded/{r['kind']}/{r['mesh']}",
+            r["wall_s"] * 1e6 / max(r["decode_steps"], 1),
+            f"devices={r['devices']};decode_steps={r['decode_steps']};"
+            f"toks={r['tokens']};util={r['util']:.3f};"
+            f"tok_s={r['tokens'] / max(r['wall_s'], 1e-9):.1f}"))
+    append_trajectory("serving", rows, scale)
+    return rows
+
+
 if __name__ == "__main__":
-    for row in run():
-        print(row.csv())
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded", action="store_true",
+                    help="also bench the continuous scheduler on a "
+                         f"{SHARDED_MESH} mesh of {SHARDED_NDEV} forced "
+                         "host devices (subprocess)")
+    ap.add_argument("--child-sharded", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--scale", default="ci", choices=["ci", "full"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.child_sharded:
+        _run_sharded_child(args.scale, args.seed)
+    elif args.sharded:
+        for row in run_sharded(args.scale, args.seed):
+            print(row.csv())
+    else:
+        for row in run(args.scale, args.seed):
+            print(row.csv())

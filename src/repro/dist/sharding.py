@@ -121,6 +121,41 @@ class ShardingRules:
             dims.append(_dim_entry(take))
         return P(*dims)
 
+    def spec_for_shape(self, axes: tuple, shape: tuple, mesh: Mesh) -> P:
+        """Shape-aware :meth:`spec`: a mesh axis only shards a dimension
+        it evenly divides (otherwise it is dropped for that dimension —
+        an array never fails to place, it degrades toward replication).
+
+        Contested mesh axes go to the dimension whose logical axis
+        appears EARLIEST IN THE RULE TABLE (``spec`` gives them to the
+        leftmost dimension instead), so a table can express fallbacks:
+        list ``cache_kv_heads -> model`` before ``cache_seq -> model``
+        and the sequence dimension picks up ``model`` exactly when the
+        head count does not divide it (small GQA configs).
+        """
+        if len(axes) != len(shape):
+            raise ValueError(
+                f"spec_for_shape got {len(axes)} axis entries for a "
+                f"{len(shape)}-d shape {shape}")
+        sizes = mesh_axis_sizes(mesh)
+        prio = {name: i for i, (name, _) in enumerate(self._rules)}
+        order = sorted((i for i, a in enumerate(axes) if a is not None),
+                       key=lambda i: (prio.get(axes[i], len(prio)), i))
+        used: set = set()
+        take: dict = {}
+        for i in order:
+            got, prod = [], 1
+            for m in self.mesh_axes(axes[i]):
+                if m not in sizes or m in used:
+                    continue
+                if shape[i] % (prod * sizes[m]) != 0:
+                    continue
+                got.append(m)
+                used.add(m)
+                prod *= sizes[m]
+            take[i] = tuple(got)
+        return P(*[_dim_entry(take.get(i, ())) for i in range(len(axes))])
+
 
 # ---------------------------------------------------------------------------
 # activation hints
@@ -152,19 +187,39 @@ def _ambient_mesh() -> Optional[Mesh]:
     return None if mesh.empty else mesh
 
 
-def resolve_hint_spec(dim_specs: tuple, mesh: Mesh) -> Optional[P]:
+def mesh_axis_sizes(mesh) -> dict:
+    """``{axis name: size}`` for a concrete :class:`Mesh` or an
+    :class:`~jax.sharding.AbstractMesh` (both expose ``.shape``)."""
+    return dict(mesh.shape)
+
+
+def resolve_hint_spec(dim_specs: tuple, mesh: Mesh,
+                      shape: Optional[tuple] = None) -> Optional[P]:
     """The PartitionSpec a :func:`hint` would pin on ``mesh`` right now
     (honoring the active :func:`drop_hint_axes` set), or None when every
-    entry resolves empty (the hint is a no-op)."""
+    entry resolves empty (the hint is a no-op).
+
+    With ``shape``, mesh axes that do not evenly divide their dimension
+    are also dropped — a hint written for the production mesh degrades
+    to a partial pin (or a no-op) on meshes whose factors don't fit,
+    instead of failing to lower (serving small configs on host meshes).
+    """
     present = set(mesh.axis_names)
     dropped = _dropped_axes()
+    sizes = mesh_axis_sizes(mesh)
     used: set = set()
     dims = []
-    for entry in dim_specs:
-        take = tuple(m for m in _as_tuple(entry)
-                     if m in present and m not in dropped and m not in used)
-        used.update(take)
-        dims.append(_dim_entry(take))
+    for i, entry in enumerate(dim_specs):
+        got, prod = [], 1
+        for m in _as_tuple(entry):
+            if m not in present or m in dropped or m in used:
+                continue
+            if shape is not None and shape[i] % (prod * sizes[m]) != 0:
+                continue
+            got.append(m)
+            used.add(m)
+            prod *= sizes[m]
+        dims.append(_dim_entry(tuple(got)))
     return P(*dims) if used else None
 
 
@@ -172,9 +227,10 @@ def hint(x: jax.Array, *dim_specs: MeshAxes) -> jax.Array:
     """Pin ``x``'s sharding: one mesh-axes entry per array dimension.
 
     No-op when no mesh is active.  Entries naming mesh axes the active
-    mesh lacks, axes masked by :func:`drop_hint_axes`, or axes already
-    claimed by an earlier dimension are dropped (never an error), so a
-    single call site serves every mesh and the vmapped replica path.
+    mesh lacks, axes masked by :func:`drop_hint_axes`, axes already
+    claimed by an earlier dimension, or axes whose size does not evenly
+    divide the dimension are dropped (never an error), so a single call
+    site serves every mesh and the vmapped replica path.
     """
     if len(dim_specs) != x.ndim:
         raise ValueError(
@@ -183,10 +239,11 @@ def hint(x: jax.Array, *dim_specs: MeshAxes) -> jax.Array:
     mesh = _ambient_mesh()
     if mesh is None:
         return x
-    spec = resolve_hint_spec(dim_specs, mesh)
+    spec = resolve_hint_spec(dim_specs, mesh, tuple(x.shape))
     if spec is None:
         return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
-__all__ = ["ShardingRules", "hint", "drop_hint_axes", "resolve_hint_spec"]
+__all__ = ["ShardingRules", "hint", "drop_hint_axes", "resolve_hint_spec",
+           "mesh_axis_sizes"]

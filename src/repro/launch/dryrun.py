@@ -1,37 +1,3 @@
-import os
-import sys
-
-
-def _argv_value(flag: str) -> str:
-    for _i, _a in enumerate(sys.argv):
-        if _a == flag and _i + 1 < len(sys.argv):
-            return sys.argv[_i + 1]
-        if _a.startswith(flag + "="):
-            return _a.split("=", 1)[1]
-    return ""
-
-
-# host placeholder device count must match the requested mesh and is
-# fixed BEFORE jax initializes: 512 for pod/multipod, 10,240 for the
-# scale-out lowering check (--mesh multipod10k = 40 pods x 256)
-_ndev = 10_240 if _argv_value("--mesh") == "multipod10k" else 512
-_flags = (os.environ.get("XLA_FLAGS", "")
-          + f" --xla_force_host_platform_device_count={_ndev}")
-# XLA's while-loop LICM hoists dtype converts of the remat residual
-# stack OUT of the backward loop, materializing a full fp32 copy of the
-# per-layer activations (2-30 GB) — disable it for TRAINING dry-runs.
-# For SERVING dry-runs LICM must stay ON: it hoists the (loop-invariant)
-# K/V gathers out of the flash kv scan; without it every block re-
-# gathers the full cache. Decide from argv BEFORE jax initializes.
-_shape_arg = _argv_value("--shape")
-_is_train = (_shape_arg in ("", "train_4k")
-             or "--sync" in " ".join(sys.argv))
-if _is_train:
-    _flags += " --xla_disable_hlo_passes=while-loop-invariant-code-motion"
-os.environ["XLA_FLAGS"] = _flags
-# ^ MUST precede any jax import/init: the dry-run builds the production
-#   512-chip mesh out of host placeholder devices (see MULTI-POD DRY-RUN).
-
 """Multi-pod dry-run: lower + compile every (arch x input-shape) on the
 production meshes, print memory/cost analyses, and dump roofline terms.
 
@@ -39,26 +5,28 @@ Usage:
   python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh pod
   python -m repro.launch.dryrun --all --mesh pod --out benchmarks/results
   python -m repro.launch.dryrun --all --mesh multipod   # 2x16x16
+  python -m repro.launch.dryrun --serve --arch llama4_maverick_400b_a17b \
+      --mesh multipod --out benchmarks/results   # sharded serving pair
 
 Each combo can also be run in a fresh subprocess (--subprocess) so one
 failure/compile-OOM cannot take down the sweep; that is how
 ``benchmarks/roofline.py`` drives it.
+
+Importing this module is side-effect free. XLA is configured by
+``main()`` AFTER argparse and BEFORE the first jax import — the host
+placeholder device count must match the requested mesh, and flags are
+frozen once jax initializes, so every jax/repro import in this file
+lives inside a function.
 """
+from __future__ import annotations
 
 import argparse
 import json
+import os
 import subprocess
 import sys
 import time
 import traceback
-
-import jax
-
-from repro.configs import ARCHS, INPUT_SHAPES, get_arch, get_shape
-from repro.launch.analysis import analyze, model_flops_for
-from repro.launch.mesh import chips_in, make_production_mesh
-from repro.launch.steps import build_program
-from repro.models import build_model
 
 # (arch, shape) combos that are intentionally skipped, with reasons
 # (see DESIGN.md §6).
@@ -67,6 +35,34 @@ SKIPS: dict[tuple[str, str], str] = {
         "encoder-decoder ASR: 524k-token decode is not meaningful for a "
         "1500-frame/448-token enc-dec model (DESIGN.md §6).",
 }
+
+# pods per multi-pod mesh variant (absent key = single pod)
+MESH_PODS = {"multipod": 2, "multipod10k": 40}
+
+
+def configure_xla(args) -> None:
+    """Set XLA_FLAGS from the parsed args. Must run before jax init.
+
+    Device count: 512 for pod/multipod, 10,240 for the scale-out
+    lowering check (--mesh multipod10k = 40 pods x 256).
+
+    XLA's while-loop LICM hoists dtype converts of the remat residual
+    stack OUT of the backward loop, materializing a full fp32 copy of
+    the per-layer activations (2-30 GB) — disable it for TRAINING
+    dry-runs. For SERVING dry-runs (--serve, or a decode/prefill
+    --shape) LICM must stay ON: it hoists the (loop-invariant) K/V
+    gathers out of the flash kv scan; without it every block re-gathers
+    the full cache.
+    """
+    ndev = 10_240 if args.mesh == "multipod10k" else 512
+    flags = (os.environ.get("XLA_FLAGS", "")
+             + f" --xla_force_host_platform_device_count={ndev}")
+    is_train = (not args.serve
+                and (args.all or args.shape in (None, "train_4k")
+                     or args.sync != "baseline"))
+    if is_train:
+        flags += " --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+    os.environ["XLA_FLAGS"] = flags
 
 
 def build_tthf_program(model, shape, mesh, sync: str, consensus_mode: str,
@@ -80,10 +76,12 @@ def build_tthf_program(model, shape, mesh, sync: str, consensus_mode: str,
     star / local). ``fused_interval`` lowers the flat (R, P) carrier
     step (DESIGN.md §12); ``donate=False`` keeps the param input buffer
     alive, for the donated-vs-undonated memory_analysis delta."""
+    import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core.distributed import (
         TTHFScaleConfig, make_tthf_train_step, tthf_shardings)
+    from repro.launch.steps import param_dtype_for
 
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     # giant models: replica = one whole pod (FSDP inside), clusters of
@@ -100,7 +98,6 @@ def build_tthf_program(model, shape, mesh, sync: str, consensus_mode: str,
         consensus_every=consensus_every, gamma_d2d=gamma,
         consensus_mode=consensus_mode, lr=1e-2, graph="ring",
         granularity="pod" if pod_granular else "dp")
-    from repro.launch.steps import param_dtype_for
     step, net = make_tthf_train_step(model, scale, dtype=jnp.bfloat16,
                                      sync=sync,
                                      fused_interval=fused_interval,
@@ -133,14 +130,18 @@ def build_tthf_program(model, shape, mesh, sync: str, consensus_mode: str,
     return fn, (p_abs, batch, picks, jax.ShapeDtypeStruct((), jnp.int32))
 
 
-# pods per multi-pod mesh variant (absent key = single pod)
-MESH_PODS = {"multipod": 2, "multipod10k": 40}
-
-
 def run_one(arch: str, shape_name: str, mesh_name: str,
             verbose: bool = True, sync: str = "baseline",
             tau: int = 8, consensus_every: int = 4,
             donation_check: bool = False) -> dict:
+    import jax
+
+    from repro.configs import get_arch, get_shape
+    from repro.launch.analysis import analyze, model_flops_for
+    from repro.launch.mesh import chips_in, make_production_mesh
+    from repro.launch.steps import build_program
+    from repro.models import build_model
+
     cfg = get_arch(arch)
     shape = get_shape(shape_name)
     if (arch, shape_name) in SKIPS:
@@ -230,6 +231,60 @@ def run_one(arch: str, shape_name: str, mesh_name: str,
     return rec
 
 
+def run_serve_one(arch: str, mesh_name: str, *, slots: int = 8,
+                  max_prompt: int = 1024, max_total: int = 2048,
+                  verbose: bool = True) -> dict:
+    """Lower + compile the sharded continuous-batching serving pair
+    (admission prefill-splice and per-slot decode, exactly what
+    ``ContinuousScheduler`` runs) on a production mesh — the served-
+    model analogue of the training dry-run (ISSUE 8 / DESIGN.md §14)."""
+    from repro.configs import get_arch
+    from repro.launch.mesh import chips_in, make_production_mesh
+    from repro.launch.steps import build_serve_program
+    from repro.models import build_model
+
+    cfg = get_arch(arch)
+    mesh = make_production_mesh(multi_pod=mesh_name in MESH_PODS,
+                                pods=MESH_PODS.get(mesh_name, 2))
+    model = build_model(cfg)
+    programs = build_serve_program(model, mesh, slots=slots,
+                                   max_prompt=max_prompt,
+                                   max_total=max_total)
+    rec = {"arch": arch, "shape": "serve", "mesh": mesh_name,
+           "status": "ok", "chips": chips_in(mesh), "slots": slots,
+           "max_prompt": max_prompt, "max_total": max_total,
+           "programs": {}}
+    for name, (fn, args) in programs.items():
+        t0 = time.time()
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        prec = {
+            "lower_s": t_lower, "compile_s": t_compile,
+            "flops": float(cost.get("flops", 0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0)),
+            "arg_bytes": float(getattr(mem, "argument_size_in_bytes", 0)),
+            "out_bytes": float(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": float(getattr(mem, "alias_size_in_bytes", 0)),
+        }
+        rec["programs"][name] = prec
+        if verbose:
+            print(f"[serve {arch} x {mesh_name}] {name}: "
+                  f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+            print(f"  flops={prec['flops']:.3e} "
+                  f"bytes={prec['bytes_accessed']:.3e} "
+                  f"temp={prec['temp_bytes']:.3e}B "
+                  f"alias={prec['alias_bytes']:.3e}B")
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -259,13 +314,58 @@ def main(argv=None):
     ap.add_argument("--moe-ep", action="store_true",
                     help="expert weights stay put (expert_ffn sharded "
                          "over data, no FSDP gathers); tokens move (§Perf)")
+    ap.add_argument("--serve", action="store_true",
+                    help="lower the sharded serving pair (admission "
+                         "prefill-splice + per-slot decode) instead of a "
+                         "train/serve step shape")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="serve mode: continuous-batching slot count")
+    ap.add_argument("--max-prompt", type=int, default=1024,
+                    help="serve mode: admission prompt length")
+    ap.add_argument("--max-total", type=int, default=2048,
+                    help="serve mode: per-slot cache length")
     args = ap.parse_args(argv)
+
+    configure_xla(args)
+    # ^ MUST precede any jax import/init: the dry-run builds the
+    #   production 512-chip mesh out of host placeholder devices.
+
     if args.pair_schedule:
         from repro.models import attention as _attn
         _attn.PAIR_SCHEDULE = True
     if args.moe_ep:
         os.environ["RP_MOE_EP"] = "1"
 
+    if args.serve:
+        if not args.arch:
+            ap.error("--serve requires --arch")
+        try:
+            rec = run_serve_one(args.arch, args.mesh, slots=args.slots,
+                                max_prompt=args.max_prompt,
+                                max_total=args.max_total,
+                                verbose=args.out != "-")
+        except Exception as e:  # noqa: BLE001 — report, don't crash
+            rec = {"arch": args.arch, "shape": "serve", "mesh": args.mesh,
+                   "status": "error", "error":
+                   f"{type(e).__name__}: {e}\n"
+                   + traceback.format_exc()[-1500:]}
+        print(f"== serve {args.arch} x {args.mesh}: {rec['status']}",
+              file=sys.stderr)
+        if args.out == "-":
+            print(json.dumps(rec))
+        elif args.out:
+            import pathlib
+            p = pathlib.Path(args.out)
+            if p.is_dir():
+                p.mkdir(parents=True, exist_ok=True)
+                fname = p / f"dryrun_serve_{args.mesh}.json"
+            else:
+                fname = p
+            fname.write_text(json.dumps(rec, indent=1))
+            print(f"wrote {fname}", file=sys.stderr)
+        return 1 if rec["status"] == "error" else 0
+
+    from repro.configs import ARCHS, INPUT_SHAPES
     combos = ([(a, s) for a in ARCHS for s in INPUT_SHAPES]
               if args.all else [(args.arch, args.shape)])
 

@@ -23,3 +23,34 @@ def chips_in(mesh) -> int:
     for s in mesh.devices.shape:
         n *= s
     return n
+
+
+def make_serve_mesh(spec: str = "host"):
+    """Serving mesh over the devices of THIS process (``launch/serve.py
+    --mesh``; the production 512-chip meshes stay in
+    :func:`make_production_mesh`).
+
+    ``spec``:
+      * ``"host"``  — all local devices tensor-parallel: (data=1, model=n)
+      * ``"data"``  — all local devices data-parallel:   (data=n, model=1)
+      * ``"AxB"``   — explicit (data=A, model=B), e.g. ``"2x4"``
+
+    Axes are always ``("data", "model")`` so the serve rule tables
+    resolve identically across specs (absent/size-1 axes no-op).
+    """
+    n = len(jax.devices())
+    if spec == "host":
+        shape = (1, n)
+    elif spec == "data":
+        shape = (n, 1)
+    else:
+        try:
+            d, m = (int(x) for x in spec.split("x"))
+        except ValueError:
+            raise ValueError(
+                f"mesh spec {spec!r}: expected 'host', 'data', or 'AxB'")
+        if d * m != n:
+            raise ValueError(
+                f"mesh spec {spec!r} wants {d * m} devices, have {n}")
+        shape = (d, m)
+    return jax.make_mesh(shape, ("data", "model"))

@@ -5,34 +5,46 @@ Three modes:
   wave        — BatchScheduler: admit a wave, drain, admit the next
   continuous  — ContinuousScheduler: per-slot admission/retirement
 
+Multi-device: ``--mesh host|data|AxB`` serves sharded over this
+process's devices (params tensor-parallel over ``model``, cache leaves
+along heads/experts, slots over ``data`` — DESIGN.md §14).
+``--host-devices N`` forces N simulated host devices (must be the
+FIRST jax configuration of the process; it sets XLA_FLAGS before jax
+initializes).
+
 Example (CPU, reduced config):
   python -m repro.launch.serve --arch mamba2-370m --reduced \
       --batch 4 --prompt-len 64 --gen 16
   python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
-      --scheduler continuous --requests 12 --gen 16
+      --scheduler continuous --requests 12 --gen 16 \
+      --host-devices 8 --mesh host
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
 
 
-def _run_scheduler(args, cfg, model, params):
+def _run_scheduler(args, cfg, model, params, mesh):
     from repro.obs.sink import make_obs
-    from repro.serving.scheduler import Request, make_scheduler, run_trace
+    from repro.serving import Request, make_scheduler, run_trace
 
     rng = np.random.default_rng(args.seed)
     obs = make_obs(args.trace_dir, profile=args.profile,
                    run_name="serve",
                    config={"args": vars(args)},
-                   extra={"arch": cfg.name, "scheduler": args.scheduler})
+                   extra={"arch": cfg.name, "scheduler": args.scheduler,
+                          "mesh": args.mesh or "single",
+                          "devices": 1 if mesh is None
+                          else int(mesh.devices.size)})
     sched = make_scheduler(args.scheduler, model, slots=args.batch,
                            max_prompt=args.prompt_len,
                            max_total=args.prompt_len + args.gen,
                            temperature=args.temperature, seed=args.seed,
-                           obs=obs)
+                           obs=obs, mesh=mesh)
     arrivals = []
     step = 0
     for rid in range(args.requests):
@@ -57,8 +69,9 @@ def _run_scheduler(args, cfg, model, params):
     finally:
         obs.close()
     dt = time.time() - t0
+    ndev = 1 if mesh is None else int(mesh.devices.size)
     print(f"arch={cfg.name} scheduler={args.scheduler} slots={args.batch} "
-          f"requests={args.requests}")
+          f"requests={args.requests} devices={ndev}")
     print(f"done={stats.requests_done} prefills={stats.prefills} "
           f"decode_steps={stats.decode_steps} "
           f"tokens={stats.tokens_generated} "
@@ -92,6 +105,13 @@ def main(argv=None):
                     help="number of requests for scheduler modes")
     ap.add_argument("--arrival-gap", type=float, default=2.0,
                     help="mean Poisson inter-arrival gap (decode steps)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve sharded over this process's devices: "
+                         "'host' (all tensor-parallel), 'data' (all "
+                         "data-parallel), or 'AxB' (data x model)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N simulated host devices (sets XLA_FLAGS "
+                         "before jax initializes)")
     ap.add_argument("--trace-dir", default=None,
                     help="observability dir (repro.obs): Chrome trace, "
                          "per-request latency JSONL, run manifest")
@@ -99,11 +119,17 @@ def main(argv=None):
                     help="also wrap the run in jax.profiler.trace")
     args = ap.parse_args(argv)
 
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count="
+              f"{args.host_devices}")
+
     import jax
     import jax.numpy as jnp
     from repro.configs import get_arch
     from repro.models import build_model
-    from repro.serving.sampling import sample_tokens
+    from repro.serving import sample_tokens, serve_shardings, shard_params
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -112,8 +138,14 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed))
     key = jax.random.PRNGKey(args.seed + 1)
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.mesh)
+        params = shard_params(params, model, mesh)
+
     if args.scheduler != "direct":
-        return _run_scheduler(args, cfg, model, params)
+        return _run_scheduler(args, cfg, model, params, mesh)
 
     B, T = args.batch, args.prompt_len
     tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
@@ -126,13 +158,24 @@ def main(argv=None):
             key, (B, cfg.enc_seq_len, cfg.d_model)) * 0.1
 
     total = T + args.gen + (cfg.enc_seq_len if cfg.kind == "vlm" else 0)
+    jit_kw_pf, jit_kw_dec = {}, {}
+    from contextlib import nullcontext
+    ctx = nullcontext() if mesh is None else mesh
+    if mesh is not None:
+        sh = serve_shardings(model, mesh, slots=B, max_total=total,
+                             dtype=jnp.float32)
+        jit_kw_pf = {"out_shardings": (sh.logits, sh.cache,
+                                       sh.replicated)}
+        jit_kw_dec = {"out_shardings": (sh.logits, sh.cache)}
     t0 = time.time()
     prefill = jax.jit(lambda p, b: model.prefill(
-        p, b, dtype=jnp.float32, cache_dtype=jnp.float32, cache_len=total))
-    logits, cache, pos = prefill(params, batch)
+        p, b, dtype=jnp.float32, cache_dtype=jnp.float32,
+        cache_len=total), **jit_kw_pf)
+    with ctx:
+        logits, cache, pos = prefill(params, batch)
     t_prefill = time.time() - t0
     decode = jax.jit(lambda p, t, c, s: model.decode_step(
-        p, t, c, s, dtype=jnp.float32))
+        p, t, c, s, dtype=jnp.float32), **jit_kw_dec)
 
     out_tokens = []
     t0 = time.time()
@@ -140,12 +183,15 @@ def main(argv=None):
         key, ks = jax.random.split(key)
         tok = sample_tokens(logits, temperature=args.temperature, key=ks)
         out_tokens.append(np.asarray(tok)[:, 0])
-        logits, cache = decode(params, tok, cache, pos)
+        with ctx:
+            logits, cache = decode(params, tok, cache, pos)
         pos = pos + 1
     t_decode = time.time() - t0
 
     gen = np.stack(out_tokens, axis=1)
-    print(f"arch={cfg.name} B={B} prompt={T} gen={args.gen}")
+    ndev = 1 if mesh is None else int(mesh.devices.size)
+    print(f"arch={cfg.name} B={B} prompt={T} gen={args.gen} "
+          f"devices={ndev}")
     print(f"prefill: {t_prefill:.2f}s  decode: {t_decode:.2f}s "
           f"({args.gen * B / max(t_decode, 1e-9):.1f} tok/s)")
     print("sampled token ids (first row):", gen[0].tolist())

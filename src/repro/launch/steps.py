@@ -47,11 +47,11 @@ TRAIN_RULES = ShardingRules((
 ))
 
 # Serving: weights replicated over data (latency path), tensor-parallel
-# over model; expert weights stay FSDP-sharded (memory).
-SERVE_RULES = TRAIN_RULES.with_overrides(
-    embed=None,
-    rnn_width_in=None,
-)
+# over model; expert weights stay FSDP-sharded (memory). The table
+# lives with the serving stack (DESIGN.md §14); re-exported here so the
+# §Perf hillclimb still edits rule tables in one module.
+from repro.serving.sharding import (  # noqa: E402
+    SERVE_CACHE_RULES, SERVE_PARAM_RULES as SERVE_RULES)
 
 CACHE_RULES_DECODE = ShardingRules((
     ("cache_batch", ("pod", "data")),
@@ -285,3 +285,75 @@ def build_program(model: ModelApi, shape: InputShape, mesh: Mesh, *,
     )
     args = (params_abs, specs["token"], specs["cache"], specs["pos"])
     return fn, args
+
+
+def build_serve_program(model: ModelApi, mesh: Mesh, *,
+                        slots: int = 8, max_prompt: int = 1024,
+                        max_total: int = 2048, dtype=jnp.bfloat16,
+                        rules: ShardingRules | None = None,
+                        cache_rules: ShardingRules | None = None):
+    """The continuous-batching serving pair on a production mesh:
+
+    * ``admission`` — batch-1 prefill + ``write_cache_slot`` splice into
+      the live ``(slots, max_total)`` cache (traced slot index);
+    * ``decode`` — one sharded decode step over all slots with a
+      per-slot ``pos`` vector (the cache buffer is donated, mirroring
+      the scheduler's steady state).
+
+    Returns ``{"admission": (fn, args), "decode": (fn, args)}`` with
+    every boundary pinned by :func:`repro.serving.serve_shardings` —
+    the dryrun serve mode lowers exactly what ``ContinuousScheduler``
+    runs (ISSUE 8 / DESIGN.md §14).
+    """
+    from repro.serving import serve_shardings
+    cfg = model.cfg
+    if cfg.kind in ("vlm", "encdec", "audio"):
+        raise ValueError(
+            f"serve program is token-only; arch kind {cfg.kind!r} needs "
+            "frontend inputs the request path does not carry")
+    pdt = param_dtype_for(cfg)
+    sh = serve_shardings(model, mesh, slots=slots, max_total=max_total,
+                         dtype=dtype, param_dtype=pdt, rules=rules,
+                         cache_rules=cache_rules)
+    params_abs, _ = model.abstract_params(dtype=pdt)
+    cache_abs = model.abstract_cache(slots, max_total, dtype)
+    i32 = jnp.int32
+    logits_abs = jax.ShapeDtypeStruct((slots, 1, cfg.padded_vocab),
+                                      dtype)
+    pos_abs = jax.ShapeDtypeStruct((slots,), i32)
+
+    def admission(params, cache, pos, logits, tokens, length, slot):
+        lg1, c1, p1 = model.prefill(
+            params, {"tokens": tokens}, dtype=dtype, cache_dtype=dtype,
+            cache_len=max_total, lengths=length)
+        cache, pos = model.write_cache_slot(
+            cache, c1, slot, pos=pos, one_pos=p1[0],
+            cache_rules=sh.cache_rules)
+        logits = jax.lax.dynamic_update_slice(
+            logits, lg1.astype(logits.dtype), (slot, 0, 0))
+        return cache, pos, logits
+
+    adm = jax.jit(
+        admission,
+        in_shardings=(sh.params, sh.cache, sh.pos, sh.logits,
+                      sh.replicated, sh.replicated, sh.replicated),
+        out_shardings=(sh.cache, sh.pos, sh.logits),
+        donate_argnums=(1,),
+    )
+    adm_args = (params_abs, cache_abs, pos_abs, logits_abs,
+                jax.ShapeDtypeStruct((1, max_prompt), i32),
+                jax.ShapeDtypeStruct((1,), i32),
+                jax.ShapeDtypeStruct((), i32))
+
+    def decode(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos, dtype=dtype)
+
+    dec = jax.jit(
+        decode,
+        in_shardings=(sh.params, sh.token, sh.cache, sh.pos),
+        out_shardings=(sh.logits, sh.cache),
+        donate_argnums=(2,),
+    )
+    dec_args = (params_abs, jax.ShapeDtypeStruct((slots, 1), i32),
+                cache_abs, pos_abs)
+    return {"admission": (adm, adm_args), "decode": (dec, dec_args)}

@@ -603,6 +603,12 @@ def decode_attention(p, cfg, x, cache, pos, *, window=0,
         q = rope(q.reshape(B, 1, -1, cfg.head_dim), pos_arr,
                  cfg.rope_theta).reshape(q.shape)
         k_new = rope(k_new, pos_arr, cfg.rope_theta)
+    # tensor-parallel decode: per-token projections sharded over heads
+    # (shape-aware — a no-op on single device / indivisible head counts)
+    from repro.dist.sharding import hint
+    q = hint(q, ("pod", "data"), None, "model", None, None)
+    k_new = hint(k_new, ("pod", "data"), None, "model", None)
+    v_new = hint(v_new, ("pod", "data"), None, "model", None)
 
     S = cache["k"].shape[1]
     slot = jnp.where(window > 0, pos % jnp.maximum(S, 1), pos)

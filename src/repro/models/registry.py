@@ -69,9 +69,10 @@ class ModelApi:
                              cache_len=cache_len, lengths=lengths)
 
     def write_cache_slot(self, cache, one_cache, slot, *, pos=None,
-                         one_pos=None):
+                         one_pos=None, cache_rules=None):
         return serve.write_cache_slot(self.cfg, cache, one_cache, slot,
-                                      pos=pos, one_pos=one_pos)
+                                      pos=pos, one_pos=one_pos,
+                                      cache_rules=cache_rules)
 
     def decode_step(self, params, token, cache, pos, *, dtype=jnp.bfloat16,
                     serve_window=0):
@@ -79,9 +80,10 @@ class ModelApi:
                                  dtype=dtype, serve_window=serve_window)
 
     def init_cache(self, batch, seq_len, dtype=jnp.bfloat16,
-                   serve_window=0):
+                   serve_window=0, mesh=None, cache_rules=None):
         return serve.init_cache_tree(self.cfg, batch, seq_len, dtype,
-                                     serve_window=serve_window)
+                                     serve_window=serve_window,
+                                     mesh=mesh, cache_rules=cache_rules)
 
     def abstract_cache(self, batch, seq_len, dtype=jnp.bfloat16,
                        serve_window=0):

@@ -108,6 +108,10 @@ def decode_rglru(p, cfg, x, cache):
     dt = x.dtype
     ga = jax.nn.gelu(x @ p["w_gelu"].astype(dt), approximate=True)
     xb = x @ p["w_rec"].astype(dt)
+    # tensor-parallel decode: recurrence width sharded over model
+    # (shape-aware — a no-op on single device / indivisible widths)
+    from repro.dist.sharding import hint
+    xb = hint(xb, ("pod", "data"), None, "model")
     xb, conv_state = _causal_conv(xb, p["conv"], cache["conv"])
     a, beta = _gates(p, xb)                        # (B, 1, w)
     h = a[:, 0] * cache["h"] + beta[:, 0] * xb[:, 0].astype(jnp.float32)

@@ -228,9 +228,14 @@ def decode_ssm(p, cfg, x, cache):
     a = jnp.exp(dt * A)                                        # (b, H)
 
     xh = xs.reshape(b, H, P).astype(jnp.float32)
+    # tensor-parallel decode: recurrent state sharded over SSM heads
+    # (shape-aware — a no-op on single device / indivisible head counts)
+    from repro.dist.sharding import hint
+    xh = hint(xh, ("pod", "data"), "model", None)
     h = cache["h"]
     h = a[..., None, None] * h + \
         dt[..., None, None] * Bm[:, None, :, None] * xh[:, :, None, :]
+    h = hint(h, ("pod", "data"), "model", None, None)
     y = jnp.einsum("bs,bhsp->bhp", Cm, h)                      # (b, H, P)
     y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
     y = y.reshape(b, 1, d_in).astype(dt_model)

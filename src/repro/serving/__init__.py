@@ -1,8 +1,29 @@
+"""Public serving API: engine primitives, schedulers, sampling, and
+the serving sharding layer (DESIGN.md §11, §14).
+
+Import from here — ``launch/serve.py``, benchmarks, and tests should
+not deep-import ``repro.serving.*`` modules.
+"""
 from repro.serving.engine import (
     init_cache_tree, cache_logical_axes_tree, prefill, decode_step,
     write_cache_slot,
 )
 from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import (
+    BatchScheduler, ContinuousScheduler, Request, RequestRecord,
+    SchedulerStats, make_scheduler, run_trace,
+)
+from repro.serving.sharding import (
+    SERVE_CACHE_RULES, SERVE_PARAM_RULES, ServeShardings,
+    cache_shardings, param_shardings, serve_shardings, shard_params,
+)
 
-__all__ = ["init_cache_tree", "cache_logical_axes_tree", "prefill",
-           "decode_step", "write_cache_slot", "sample_tokens"]
+__all__ = [
+    "init_cache_tree", "cache_logical_axes_tree", "prefill",
+    "decode_step", "write_cache_slot", "sample_tokens",
+    "BatchScheduler", "ContinuousScheduler", "Request", "RequestRecord",
+    "SchedulerStats", "make_scheduler", "run_trace",
+    "SERVE_CACHE_RULES", "SERVE_PARAM_RULES", "ServeShardings",
+    "cache_shardings", "param_shardings", "serve_shardings",
+    "shard_params",
+]

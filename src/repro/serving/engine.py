@@ -53,8 +53,35 @@ def cache_len_for(cfg, seq_len: int, serve_window: int = 0) -> int:
 
 
 def init_cache_tree(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16,
-                    serve_window: int = 0):
-    """Cache pytree for the whole model (all layers stacked)."""
+                    serve_window: int = 0, mesh=None, cache_rules=None):
+    """Cache pytree for the whole model (all layers stacked).
+
+    With ``mesh``, every leaf is placed via a ``NamedSharding`` resolved
+    from its ``cache_logical_axes_tree`` logical axes under
+    ``cache_rules`` (default ``serving.sharding.SERVE_CACHE_RULES`` —
+    heads/experts sharded over ``model``, sequence as the fallback,
+    slots over the replica axes), so the live batch starts sharded and
+    every later splice/decode preserves that placement.
+    """
+    tree = _init_cache_tree(cfg, batch, seq_len, dtype, serve_window)
+    if mesh is None:
+        return tree
+    from repro.serving.sharding import SERVE_CACHE_RULES
+    rules = cache_rules or SERVE_CACHE_RULES
+    axes = cache_logical_axes_tree(cfg)
+    is_ax = lambda x: isinstance(x, tuple)  # noqa: E731
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    flat_ax = jax.tree_util.tree_flatten(axes, is_leaf=is_ax)[0]
+    assert len(flat) == len(flat_ax)
+    from jax.sharding import NamedSharding
+    out = [jax.device_put(l, NamedSharding(
+        mesh, rules.spec_for_shape(tuple(ax), tuple(l.shape), mesh)))
+        for l, ax in zip(flat, flat_ax)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _init_cache_tree(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16,
+                     serve_window: int = 0):
     kind = cfg.kind
     S = cache_len_for(cfg, seq_len, serve_window)
 
@@ -614,7 +641,7 @@ def decode_step(p, cfg, token, cache, pos, *, dtype=jnp.bfloat16,
 # ---------------------------------------------------------------------------
 
 def write_cache_slot(cfg, cache, one_cache, slot, *, pos=None,
-                     one_pos=None):
+                     one_pos=None, cache_rules=None):
     """Write a single-request cache into slot ``slot`` of a live batch.
 
     ``one_cache`` comes from a batch-1 :func:`prefill` with the same
@@ -625,24 +652,37 @@ def write_cache_slot(cfg, cache, one_cache, slot, *, pos=None,
     ``jax.lax.dynamic_update_slice``: ``slot`` may be traced, keeping
     one jit signature for the process lifetime.
 
+    With ``cache_rules`` and an active mesh, every spliced leaf is
+    re-pinned to the sharding its logical axes resolve to — the splice
+    PRESERVES leaf shardings (the batch-1 source is resharded into the
+    live layout; the live cache never moves).
+
     Optionally also splices ``one_pos`` (scalar or (1,)) into the
     per-slot ``pos`` vector. Returns ``new_cache`` (and ``new_pos``
     when ``pos`` is given).
     """
+    from repro.dist.sharding import _ambient_mesh
     axes = cache_logical_axes_tree(cfg)
     flat_dst, treedef = jax.tree_util.tree_flatten(cache)
     flat_src = jax.tree_util.tree_flatten(one_cache)[0]
     flat_ax = jax.tree_util.tree_flatten(
         axes, is_leaf=lambda x: isinstance(x, tuple))[0]
     assert len(flat_dst) == len(flat_src) == len(flat_ax)
+    mesh = _ambient_mesh() if cache_rules is not None else None
     slot = jnp.asarray(slot, jnp.int32)
     out = []
     for dst, src, ax in zip(flat_dst, flat_src, flat_ax):
         b = ax.index("cache_batch")
         start = [jnp.zeros((), jnp.int32)] * dst.ndim
         start[b] = slot
-        out.append(jax.lax.dynamic_update_slice(
-            dst, src.astype(dst.dtype), tuple(start)))
+        new = jax.lax.dynamic_update_slice(
+            dst, src.astype(dst.dtype), tuple(start))
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            new = jax.lax.with_sharding_constraint(
+                new, NamedSharding(mesh, cache_rules.spec_for_shape(
+                    tuple(ax), tuple(new.shape), mesh)))
+        out.append(new)
     new_cache = jax.tree_util.tree_unflatten(treedef, out)
     if pos is None:
         return new_cache

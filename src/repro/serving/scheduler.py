@@ -22,16 +22,19 @@ host sync.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import ModelApi
 from repro.obs.sink import NULL_OBS
 from repro.serving.sampling import sample_tokens
+
+if TYPE_CHECKING:  # annotation-only: keeps repro.serving import-cycle-free
+    from repro.models import ModelApi
 
 
 @dataclass
@@ -90,12 +93,19 @@ class SchedulerStats:
 
 
 class _SchedulerBase:
-    """Shared request plumbing: queue, slots, padding, sampling."""
+    """Shared request plumbing: queue, slots, padding, sampling.
+
+    With ``mesh``, the scheduler serves multi-device: params/cache/
+    logits shardings are resolved once (``serving.sharding.serve_
+    shardings``) and pinned as jit out_shardings, so every compiled
+    entry point keeps its single process-lifetime signature (PR 5
+    invariant) while the cache lives sharded across the mesh.
+    """
 
     def __init__(self, model: ModelApi, *, slots: int = 4,
                  max_prompt: int = 64, max_total: int = 128,
                  temperature: float = 0.0, seed: int = 0,
-                 obs=NULL_OBS):
+                 obs=NULL_OBS, mesh=None, rules=None, cache_rules=None):
         assert max_prompt <= max_total
         if model.cfg.kind in ("vlm", "encdec", "audio"):
             raise ValueError(
@@ -112,9 +122,22 @@ class _SchedulerBase:
         self.active: list[Optional[Request]] = [None] * slots
         self.stats = SchedulerStats()
         self.obs = obs
+        self.mesh = mesh
+        self.shardings = None
+        if mesh is not None:
+            from repro.serving.sharding import serve_shardings
+            self.shardings = serve_shardings(
+                model, mesh, slots=slots, max_total=max_total,
+                dtype=jnp.float32, rules=rules, cache_rules=cache_rules)
         # the step clock: one tick per step() call (admission attempts
         # and decode steps alike) — all Request stamps use this clock
         self.clock = 0
+
+    def _mesh_ctx(self):
+        """Ambient-mesh context for jit tracing/execution: the in-model
+        ``hint`` calls resolve against it; ``nullcontext`` when serving
+        single-device."""
+        return self.mesh if self.mesh is not None else nullcontext()
 
     def submit(self, req: Request) -> None:
         assert 1 <= len(req.prompt) <= self.max_prompt
@@ -184,8 +207,9 @@ class _SchedulerBase:
         if not any(r is not None for r in self.active):
             return emitted
         with self.obs.span("decode_step", step=self.clock):
-            self._last_logits, self._cache = self._decode(
-                params, tok, self._cache, self._pos)
+            with self._mesh_ctx():
+                self._last_logits, self._cache = self._decode(
+                    params, tok, self._cache, self._pos)
         self._pos = self._pos + 1
         self.stats.decode_steps += 1
         self.stats.slot_steps += self.slots
@@ -227,15 +251,21 @@ class BatchScheduler(_SchedulerBase):
     def __init__(self, model: ModelApi, *, slots: int = 4,
                  max_prompt: int = 64, max_total: int = 128,
                  temperature: float = 0.0, seed: int = 0,
-                 obs=NULL_OBS):
+                 obs=NULL_OBS, mesh=None, rules=None, cache_rules=None):
         super().__init__(model, slots=slots, max_prompt=max_prompt,
                          max_total=max_total, temperature=temperature,
-                         seed=seed, obs=obs)
+                         seed=seed, obs=obs, mesh=mesh, rules=rules,
+                         cache_rules=cache_rules)
+        sh = self.shardings
+        jit_kw_pf = {} if sh is None else {
+            "out_shardings": (sh.logits, sh.cache, sh.pos)}
+        jit_kw_dec = {} if sh is None else {
+            "out_shardings": (sh.logits, sh.cache)}
         self._prefill = jax.jit(lambda p, b, l: model.prefill(
             p, b, dtype=jnp.float32, cache_dtype=jnp.float32,
-            cache_len=max_total, lengths=l))
+            cache_len=max_total, lengths=l), **jit_kw_pf)
         self._decode = jax.jit(lambda p, t, c, s: model.decode_step(
-            p, t, c, s, dtype=jnp.float32))
+            p, t, c, s, dtype=jnp.float32), **jit_kw_dec)
         self._cache = None
         self._pos = None            # (slots,) per-slot absolute position
         self._last_logits = None
@@ -265,8 +295,10 @@ class BatchScheduler(_SchedulerBase):
                 lens[i] = len(r.prompt)
         with self.obs.span("prefill", wave=self.stats.prefills,
                            requests=int((lens > 0).sum())):
-            logits, cache, pos = self._prefill(
-                params, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens))
+            with self._mesh_ctx():
+                logits, cache, pos = self._prefill(
+                    params, {"tokens": jnp.asarray(toks)},
+                    jnp.asarray(lens))
         self._cache = cache
         self._pos = pos             # (slots,) = per-request prompt length
         self._last_logits = logits
@@ -299,15 +331,23 @@ class ContinuousScheduler(_SchedulerBase):
     def __init__(self, model: ModelApi, *, slots: int = 4,
                  max_prompt: int = 64, max_total: int = 128,
                  temperature: float = 0.0, seed: int = 0,
-                 obs=NULL_OBS):
+                 obs=NULL_OBS, mesh=None, rules=None, cache_rules=None):
         super().__init__(model, slots=slots, max_prompt=max_prompt,
                          max_total=max_total, temperature=temperature,
-                         seed=seed, obs=obs)
+                         seed=seed, obs=obs, mesh=mesh, rules=rules,
+                         cache_rules=cache_rules)
         cfg = model.cfg
-        self._cache = model.init_cache(slots, max_total, jnp.float32)
+        sh = self.shardings
+        crules = None if sh is None else sh.cache_rules
+        self._cache = model.init_cache(slots, max_total, jnp.float32,
+                                       mesh=mesh, cache_rules=crules)
         self._pos = jnp.zeros((slots,), jnp.int32)
-        self._last_logits = jnp.zeros((slots, 1, cfg.vocab_size),
+        self._last_logits = jnp.zeros((slots, 1, cfg.padded_vocab),
                                       jnp.float32)
+        if sh is not None:
+            self._pos = jax.device_put(self._pos, sh.pos)
+            self._last_logits = jax.device_put(self._last_logits,
+                                               sh.logits)
 
         def _admit_fn(params, cache, pos, logits, tokens, length, slot):
             lg1, c1, p1 = model.prefill(
@@ -315,13 +355,18 @@ class ContinuousScheduler(_SchedulerBase):
                 cache_dtype=jnp.float32, cache_len=max_total,
                 lengths=length)
             cache, pos = model.write_cache_slot(cache, c1, slot, pos=pos,
-                                                one_pos=p1[0])
+                                                one_pos=p1[0],
+                                                cache_rules=crules)
             logits = jax.lax.dynamic_update_slice(logits, lg1, (slot, 0, 0))
             return cache, pos, logits
 
-        self._admit_one = jax.jit(_admit_fn)
+        jit_kw_adm = {} if sh is None else {
+            "out_shardings": (sh.cache, sh.pos, sh.logits)}
+        jit_kw_dec = {} if sh is None else {
+            "out_shardings": (sh.logits, sh.cache)}
+        self._admit_one = jax.jit(_admit_fn, **jit_kw_adm)
         self._decode = jax.jit(lambda p, t, c, s: model.decode_step(
-            p, t, c, s, dtype=jnp.float32))
+            p, t, c, s, dtype=jnp.float32), **jit_kw_dec)
 
     # ------------------------------------------------------------------
     def _admit(self, params) -> int:
@@ -338,12 +383,13 @@ class ContinuousScheduler(_SchedulerBase):
             toks = np.zeros((1, self.max_prompt), np.int32)
             toks[0, : len(req.prompt)] = req.prompt
             with self.obs.span("prefill", slot=i, rid=req.rid):
-                self._cache, self._pos, self._last_logits = \
-                    self._admit_one(
-                        params, self._cache, self._pos,
-                        self._last_logits, jnp.asarray(toks),
-                        jnp.asarray([len(req.prompt)], jnp.int32),
-                        jnp.asarray(i, jnp.int32))
+                with self._mesh_ctx():
+                    self._cache, self._pos, self._last_logits = \
+                        self._admit_one(
+                            params, self._cache, self._pos,
+                            self._last_logits, jnp.asarray(toks),
+                            jnp.asarray([len(req.prompt)], jnp.int32),
+                            jnp.asarray(i, jnp.int32))
             self.stats.prefills += 1
             admitted += 1
         return admitted

@@ -1,0 +1,165 @@
+"""Serving-side sharding: the rule tables and resolved shardings that
+thread ``repro.dist`` through the inference engine (DESIGN.md §14).
+
+Two tables, same layer as the train tables in ``launch/steps.py``:
+
+* :data:`SERVE_PARAM_RULES` — weights tensor-parallel over ``model``
+  (heads / ffn / experts), replicated over the replica axes (latency
+  path); expert weights additionally FSDP-sharded over ``(pod, data)``
+  (memory).
+* :data:`SERVE_CACHE_RULES` — cache leaves sharded along heads/experts
+  first (``cache_kv_heads`` / ``ssm_heads`` / ``rnn_width`` over
+  ``model``), with ``cache_seq`` as the model-axis FALLBACK for configs
+  whose head count does not divide the mesh (table order is the
+  priority — see ``ShardingRules.spec_for_shape``), and the slot/batch
+  dimension over the replica axes when it divides.
+
+All resolution is shape-aware (``spec_for_shape``): a small config on a
+big mesh degrades toward replication instead of failing to place, so
+one table serves the 8-device host smoke and the 512-chip dryrun.
+
+:func:`serve_shardings` bundles the resolved `NamedSharding`s for one
+(model, mesh, slot geometry) into a :class:`ServeShardings`; both
+schedulers and the dryrun serve program pin their jit boundaries with
+it, which is what keeps the admission splice (`write_cache_slot`)
+sharding-preserving without any resharding collective.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import ShardingRules
+
+# Params: tensor-parallel over model, replicated over (pod, data) —
+# the latency path keeps every replica axis free for cache slots.
+# Expert weights stay FSDP-sharded (the giant-MoE memory story).
+SERVE_PARAM_RULES = ShardingRules((
+    ("batch", ("pod", "data")),
+    ("embed", None),
+    ("embed_nomodel", None),
+    ("vocab", "model"),
+    ("q_proj", "model"),
+    ("kv_proj", "model"),
+    ("ffn", "model"),
+    ("experts", "model"),
+    ("expert_ffn", None),
+    ("experts_router", None),
+    ("embed_fsdp", ("pod", "data")),
+    ("ssm_in", "model"),
+    ("ssm_heads", "model"),
+    ("ssm_state", None),
+    ("rnn_width", "model"),
+    ("rnn_width_in", None),
+    ("conv_k", None),
+    ("layers", None),
+))
+
+# Cache leaves: heads/experts first, sequence as the model-axis
+# fallback (table order = contention priority under spec_for_shape).
+SERVE_CACHE_RULES = ShardingRules((
+    ("cache_kv_heads", "model"),
+    ("ssm_heads", "model"),
+    ("rnn_width", "model"),
+    ("ssm_in", "model"),
+    ("cache_seq", "model"),
+    ("cache_batch", ("pod", "data")),
+    ("head_dim", None),
+    ("ssm_state", None),
+    ("layers", None),
+))
+
+
+def _shard_shaped(axes_tree, abs_tree, mesh: Mesh, rules: ShardingRules):
+    """Per-leaf NamedSharding from (logical axes, abstract shapes)."""
+    is_ax = lambda x: isinstance(x, tuple)  # noqa: E731
+    flat_ax, treedef = jax.tree_util.tree_flatten(axes_tree, is_leaf=is_ax)
+    flat_ab = jax.tree_util.tree_flatten(abs_tree)[0]
+    assert len(flat_ax) == len(flat_ab), (len(flat_ax), len(flat_ab))
+    out = [NamedSharding(mesh,
+                         rules.spec_for_shape(tuple(ax), tuple(ab.shape),
+                                              mesh))
+           for ax, ab in zip(flat_ax, flat_ab)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shardings(model, mesh: Mesh, *,
+                    rules: Optional[ShardingRules] = None,
+                    param_dtype=jnp.float32):
+    """Shape-aware serve-phase NamedSharding tree for the params."""
+    rules = rules or SERVE_PARAM_RULES
+    abs_p, axes = model.abstract_params(dtype=param_dtype)
+    return _shard_shaped(axes, abs_p, mesh, rules)
+
+
+def cache_shardings(model, mesh: Mesh, batch: int, seq_len: int,
+                    dtype=jnp.bfloat16, *, serve_window: int = 0,
+                    cache_rules: Optional[ShardingRules] = None):
+    """NamedSharding tree matching ``init_cache_tree``'s structure."""
+    rules = cache_rules or SERVE_CACHE_RULES
+    abs_c = model.abstract_cache(batch, seq_len, dtype,
+                                 serve_window=serve_window)
+    axes = model.cache_axes()
+    return _shard_shaped(axes, abs_c, mesh, rules)
+
+
+@dataclass(frozen=True)
+class ServeShardings:
+    """Resolved shardings for one (model, mesh, slot geometry)."""
+    mesh: Mesh
+    rules: ShardingRules            # param table
+    cache_rules: ShardingRules      # cache table
+    params: Any                     # NamedSharding tree
+    cache: Any                      # NamedSharding tree
+    token: NamedSharding            # (slots, 1) int32
+    logits: NamedSharding           # (slots, 1, vocab)
+    pos: NamedSharding              # (slots,) int32
+    replicated: NamedSharding
+
+
+def serve_shardings(model, mesh: Mesh, *, slots: int, max_total: int,
+                    dtype=jnp.float32, serve_window: int = 0,
+                    param_dtype=None,
+                    rules: Optional[ShardingRules] = None,
+                    cache_rules: Optional[ShardingRules] = None
+                    ) -> ServeShardings:
+    """Resolve every sharding the serving stack pins at jit boundaries.
+
+    ``dtype`` is the cache dtype (shapes only — resolution is dtype-
+    free); ``param_dtype`` defaults to ``dtype``.
+    """
+    rules = rules or SERVE_PARAM_RULES
+    cache_rules = cache_rules or SERVE_CACHE_RULES
+    p_sh = param_shardings(model, mesh, rules=rules,
+                           param_dtype=param_dtype or dtype)
+    c_sh = cache_shardings(model, mesh, slots, max_total, dtype,
+                           serve_window=serve_window,
+                           cache_rules=cache_rules)
+    V = model.cfg.padded_vocab   # logits carry the padded width
+    tok = NamedSharding(mesh, cache_rules.spec_for_shape(
+        ("cache_batch", None), (slots, 1), mesh))
+    lg = NamedSharding(mesh, cache_rules.spec_for_shape(
+        ("cache_batch", None, None), (slots, 1, V), mesh))
+    return ServeShardings(
+        mesh=mesh, rules=rules, cache_rules=cache_rules, params=p_sh,
+        cache=c_sh, token=tok, logits=lg,
+        pos=NamedSharding(mesh, P()),
+        replicated=NamedSharding(mesh, P()))
+
+
+def shard_params(params, model, mesh: Mesh, *,
+                 rules: Optional[ShardingRules] = None):
+    """Place a live param tree onto ``mesh`` under the serve rules."""
+    rules = rules or SERVE_PARAM_RULES
+    _, axes = model.abstract_params()
+    sh = _shard_shaped(axes, params, mesh, rules)
+    return jax.tree.map(jax.device_put, params, sh)
+
+
+__all__ = ["SERVE_PARAM_RULES", "SERVE_CACHE_RULES", "ServeShardings",
+           "serve_shardings", "param_shardings", "cache_shardings",
+           "shard_params"]

@@ -392,7 +392,7 @@ def test_scale_trainer_obs_smoke_and_parity(tmp_path):
 def test_scheduler_request_records(tmp_path):
     from repro.configs import get_arch
     from repro.models import build_model
-    from repro.serving.scheduler import (
+    from repro.serving import (
         Request, make_scheduler, run_trace)
 
     cfg = get_arch("qwen1.5-0.5b").reduced(num_layers=1, d_model=32,

@@ -7,7 +7,7 @@ import pytest
 from repro.configs import get_arch
 from repro.core.distributed import TTHFScaleConfig
 from repro.models import build_model
-from repro.serving.scheduler import BatchScheduler, Request
+from repro.serving import BatchScheduler, Request
 from repro.train import ScaleTrainer, TrainerConfig
 
 
@@ -157,7 +157,7 @@ def test_wave_no_shared_pos_early_retirement(tiny_cfg):
 def test_continuous_matches_wave_and_solo(tiny_cfg):
     """Both schedulers emit identical greedy tokens per request, each
     equal to the request's solo decode."""
-    from repro.serving.scheduler import ContinuousScheduler
+    from repro.serving import ContinuousScheduler
     model = build_model(tiny_cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(4)
@@ -184,7 +184,7 @@ def test_continuous_staggered_admission_beats_wave(tiny_cfg):
     """Heterogeneous budgets: the continuous scheduler refills retired
     slots mid-flight (prefills > waves, decode steps strictly fewer,
     higher utilization), still bit-equal to solo decode."""
-    from repro.serving.scheduler import ContinuousScheduler
+    from repro.serving import ContinuousScheduler
     model = build_model(tiny_cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(5)
@@ -215,7 +215,7 @@ def test_sample_tokens_dtype_stable(tiny_cfg):
     """The shared sampler returns int32 on BOTH paths (the temperature
     path previously leaked categorical's default integer dtype into the
     decode jit signature)."""
-    from repro.serving.sampling import sample_tokens
+    from repro.serving import sample_tokens
     logits = jnp.zeros((2, 1, 16), jnp.float32)
     greedy = sample_tokens(logits)
     temp = sample_tokens(logits, temperature=0.7,
@@ -248,7 +248,7 @@ def test_zero_budget_request_emits_nothing(tiny_cfg):
     """A prompt that already fills the cache (budget 0) completes with
     zero tokens instead of leaking one, in both schedulers; run() warns
     instead of silently truncating at max_steps."""
-    from repro.serving.scheduler import ContinuousScheduler
+    from repro.serving import ContinuousScheduler
     model = build_model(tiny_cfg)
     params = model.init(jax.random.PRNGKey(0))
     full = np.arange(1, 17, dtype=np.int32)            # 16 == max_total
