@@ -9,11 +9,19 @@ decoding, instead of idling until the wave drains.
 
   PYTHONPATH=src python -m benchmarks.serving_bench
   PYTHONPATH=src python -m benchmarks.serving_bench --sharded
+  PYTHONPATH=src python -m benchmarks.serving_bench --memory-ceiling
 
 ``--sharded`` additionally times the continuous scheduler on a
 (data=2, model=4) mesh of 8 simulated host devices against the same
 single-device trace (DESIGN.md §14). It runs in a subprocess because
 the forced device count must be set before jax initializes.
+
+``--memory-ceiling`` (DESIGN.md §15) serves the same shared-prefix
+Poisson trace under a CAPPED cache byte budget through the ring
+(continuous) and paged schedulers, recording requests-served-per-GB
+within a fixed step horizon plus the paged prefix-hit-rate; a second
+uncapped pass compares TTFT on the templated trace, attributing it to
+queueing vs chunked prefill.
 """
 from __future__ import annotations
 
@@ -89,6 +97,8 @@ def run(scale: str = "ci", seed: int = 0):
             # the retirement records the scheduler now keeps
             ql = np.array([r.queue_latency for r in stats.records])
             tt = np.array([r.ttft for r in stats.records if r.ttft >= 0])
+            pf = np.array([r.prefill_latency for r in stats.records
+                           if r.ttft >= 0])
             rows.append(Row(
                 f"serving/{kind}/{sname}", dt * 1e6 / max(
                     stats.decode_steps, 1),
@@ -99,6 +109,7 @@ def run(scale: str = "ci", seed: int = 0):
                 f"tok_s={stats.tokens_generated / max(dt, 1e-9):.1f};"
                 f"queue_p50={np.percentile(ql, 50):.0f};"
                 f"queue_p95={np.percentile(ql, 95):.0f};"
+                f"prefill_p50={np.percentile(pf, 50):.0f};"
                 f"ttft_p50={np.percentile(tt, 50):.0f};"
                 f"ttft_p95={np.percentile(tt, 95):.0f}"))
         w, c = per_sched["wave"], per_sched["continuous"]
@@ -106,6 +117,147 @@ def run(scale: str = "ci", seed: int = 0):
             f"serving/{kind}/speedup", 0.0,
             f"steps_wave={w.decode_steps};steps_cont={c.decode_steps};"
             f"step_ratio={w.decode_steps / max(c.decode_steps, 1):.2f}"))
+    append_trajectory("serving", rows, scale)
+    return rows
+
+
+def _shared_prefix_trace(rng, n_req, template, max_prompt, gap):
+    """Poisson arrivals whose prompts all start with one fixed
+    ``template``-token prefix (the prefix-sharing regime: after the
+    first admission the trie serves the template pages to everyone)."""
+    from repro.serving import Request
+    tmpl = rng.integers(1, 250, size=template).astype(np.int32)
+    arrivals, step = [], 0
+    for rid in range(n_req):
+        tail = rng.integers(
+            1, 250, size=int(rng.integers(4, max_prompt - template + 1)))
+        prompt = np.concatenate([tmpl, tail]).astype(np.int32)
+        arrivals.append((step, Request(rid=rid, prompt=prompt,
+                                       max_new=int(rng.integers(4, 13)))))
+        step += int(rng.poisson(gap))
+    return arrivals
+
+
+def _lat(stats):
+    """(queue_p50, prefill_p50, ttft_p50, mean_chunks) from records —
+    TTFT = queue_latency + prefill_latency, so the pair attributes it
+    to queueing vs (chunked) prefill."""
+    recs = [r for r in stats.records if r.ttft >= 0]
+    if not recs:
+        return -1.0, -1.0, -1.0, 0.0
+    q = float(np.percentile([r.queue_latency for r in recs], 50))
+    p = float(np.percentile([r.prefill_latency for r in recs], 50))
+    t = float(np.percentile([r.ttft for r in recs], 50))
+    ch = float(np.mean([r.prefill_chunks for r in recs]))
+    return q, p, t, ch
+
+
+def run_memory_ceiling(scale: str = "ci", seed: int = 0):
+    """Ring vs paged under one capped cache byte budget (DESIGN.md §15).
+
+    Both schedulers get the SAME cache bytes: the ring spends them on
+    ``ring_slots`` fixed (max_total)-token lanes; the paged pool spends
+    them on pages that prefix sharing and per-request page counts keep
+    mostly full. Within a fixed step horizon the paged scheduler must
+    serve strictly more requests per GB on the shared-prefix trace.
+    """
+    import warnings
+
+    import jax
+    from repro.models import build_model
+    from repro.serving import make_scheduler, run_trace
+
+    n_req = 16 if scale == "ci" else 64
+    horizon = 60 if scale == "ci" else 240
+    page_size, template = 8, 8
+    slots, max_prompt, max_total = 4, 16, 48
+    ring_slots = 2
+    cfg = _reduced_cfg(ARCH_BY_KIND["dense"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    # the capped budget: bytes for ring_slots full-length ring lanes
+    # (f32 cache: layers * K/V * kv_heads * head_dim * 4B per token)
+    tok_bytes = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 4
+    budget_tokens = ring_slots * max_total
+    budget_gb = budget_tokens * tok_bytes / 1e9
+    cache_pages = budget_tokens // page_size + 1    # same bytes, paged
+
+    rows, done = [], {}
+    for sname in ("continuous", "paged"):
+        rng = np.random.default_rng(seed)           # identical trace
+        arrivals = _shared_prefix_trace(rng, n_req, template,
+                                        max_prompt, gap=1.0)
+        kw = dict(max_prompt=max_prompt, max_total=max_total,
+                  temperature=0.0, seed=seed)
+        if sname == "paged":
+            sched = make_scheduler("paged", model, slots=slots,
+                                   page_size=page_size,
+                                   cache_pages=cache_pages, **kw)
+        else:
+            sched = make_scheduler("continuous", model,
+                                   slots=ring_slots, **kw)
+        t0 = time.time()
+        with warnings.catch_warnings():
+            # the horizon intentionally truncates the trace
+            warnings.simplefilter("ignore", RuntimeWarning)
+            stats = run_trace(sched, params, arrivals, max_steps=horizon)
+        dt = time.time() - t0
+        done[sname] = stats.requests_done
+        q50, p50, t50, chunks = _lat(stats)
+        extra = ""
+        if sname == "paged":
+            reused = sum(r.prefix_pages_reused for r in stats.records)
+            extra = (f";prefix_hit_rate={sched.prefix_hit_rate:.2f};"
+                     f"pages_reused={reused};"
+                     f"deferrals={sched.page_deferrals};"
+                     f"mean_chunks={chunks:.1f}")
+        rows.append(Row(
+            f"serving/memceil/{sname}",
+            dt * 1e6 / max(stats.decode_steps, 1),
+            f"budget_mb={budget_gb * 1e3:.2f};"
+            f"done_at_h{horizon}={stats.requests_done};"
+            f"requests_per_gb={stats.requests_done / budget_gb:.0f};"
+            f"toks={stats.tokens_generated};"
+            f"queue_p50={q50:.0f};prefill_p50={p50:.0f};"
+            f"ttft_p50={t50:.0f}" + extra))
+    assert done["paged"] > done["continuous"], (
+        "paged must serve strictly more requests per GB than ring "
+        f"under the capped budget: {done}")
+    rows.append(Row(
+        "serving/memceil/gain", 0.0,
+        f"ring_done={done['continuous']};paged_done={done['paged']};"
+        f"ratio={done['paged'] / max(done['continuous'], 1):.2f}"))
+
+    # --- uncapped templated-prefix pass: TTFT must not regress --------
+    ttft = {}
+    for sname in ("continuous", "paged"):
+        rng = np.random.default_rng(seed)
+        arrivals = _shared_prefix_trace(rng, n_req, template,
+                                        max_prompt, gap=1.0)
+        kw = dict(slots=slots, max_prompt=max_prompt,
+                  max_total=max_total, temperature=0.0, seed=seed)
+        if sname == "paged":
+            sched = make_scheduler("paged", model, page_size=page_size,
+                                   **kw)
+        else:
+            sched = make_scheduler("continuous", model, **kw)
+        stats = run_trace(sched, params, arrivals)
+        assert stats.requests_done == n_req
+        q50, p50, t50, chunks = _lat(stats)
+        ttft[sname] = t50
+        extra = ""
+        if sname == "paged":
+            reused = sum(r.prefix_pages_reused for r in stats.records)
+            assert reused > 0, "templated trace must reuse prefix pages"
+            extra = (f";pages_reused={reused};"
+                     f"prefix_hit_rate={sched.prefix_hit_rate:.2f};"
+                     f"mean_chunks={chunks:.1f}")
+        rows.append(Row(
+            f"serving/ttft_template/{sname}", 0.0,
+            f"queue_p50={q50:.0f};prefill_p50={p50:.0f};"
+            f"ttft_p50={t50:.0f}" + extra))
+    assert ttft["paged"] <= ttft["continuous"], (
+        "paged TTFT regressed vs ring on short templated prompts", ttft)
     append_trajectory("serving", rows, scale)
     return rows
 
@@ -189,6 +341,10 @@ if __name__ == "__main__":
                          "host devices (subprocess)")
     ap.add_argument("--child-sharded", action="store_true",
                     help=argparse.SUPPRESS)
+    ap.add_argument("--memory-ceiling", action="store_true",
+                    help="ring vs paged under one capped cache byte "
+                         "budget on a shared-prefix trace (requests/GB, "
+                         "prefix hit rate, TTFT attribution)")
     ap.add_argument("--scale", default="ci", choices=["ci", "full"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -196,6 +352,9 @@ if __name__ == "__main__":
         _run_sharded_child(args.scale, args.seed)
     elif args.sharded:
         for row in run_sharded(args.scale, args.seed):
+            print(row.csv())
+    elif args.memory_ceiling:
+        for row in run_memory_ceiling(args.scale, args.seed):
             print(row.csv())
     else:
         for row in run(args.scale, args.seed):

@@ -3,6 +3,8 @@
 * ``consensus_mix`` — fused Gamma-round D2D mixing (the paper's hot loop)
 * ``ssd_scan``      — Mamba-2 SSD chunked scan (mamba2/long-context)
 * ``fused_sgd``     — fused parameter update for the tau-step local scan
+* ``paged_attn``    — paged decode attention over a scalar-prefetched
+  page map (the serving engine's block cache, DESIGN.md §15)
 
 Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit wrapper
 in ``ops.py``; tests assert allclose across shape/dtype sweeps in

@@ -233,27 +233,39 @@ def run_one(arch: str, shape_name: str, mesh_name: str,
 
 def run_serve_one(arch: str, mesh_name: str, *, slots: int = 8,
                   max_prompt: int = 1024, max_total: int = 2048,
+                  paged: bool = False, page_size: int = 64,
                   verbose: bool = True) -> dict:
     """Lower + compile the sharded continuous-batching serving pair
     (admission prefill-splice and per-slot decode, exactly what
     ``ContinuousScheduler`` runs) on a production mesh — the served-
-    model analogue of the training dry-run (ISSUE 8 / DESIGN.md §14)."""
+    model analogue of the training dry-run (ISSUE 8 / DESIGN.md §14).
+    With ``paged``, lowers the paged admission/decode pair instead
+    (chunked prefill into pages + page-map decode, what
+    ``PagedContinuousScheduler`` runs — DESIGN.md §15)."""
     from repro.configs import get_arch
     from repro.launch.mesh import chips_in, make_production_mesh
-    from repro.launch.steps import build_serve_program
+    from repro.launch.steps import build_paged_serve_program, \
+        build_serve_program
     from repro.models import build_model
 
     cfg = get_arch(arch)
     mesh = make_production_mesh(multi_pod=mesh_name in MESH_PODS,
                                 pods=MESH_PODS.get(mesh_name, 2))
     model = build_model(cfg)
-    programs = build_serve_program(model, mesh, slots=slots,
-                                   max_prompt=max_prompt,
-                                   max_total=max_total)
+    if paged:
+        programs = build_paged_serve_program(
+            model, mesh, slots=slots, max_prompt=max_prompt,
+            max_total=max_total, page_size=page_size)
+    else:
+        programs = build_serve_program(model, mesh, slots=slots,
+                                       max_prompt=max_prompt,
+                                       max_total=max_total)
     rec = {"arch": arch, "shape": "serve", "mesh": mesh_name,
            "status": "ok", "chips": chips_in(mesh), "slots": slots,
            "max_prompt": max_prompt, "max_total": max_total,
-           "programs": {}}
+           "paged": paged, "programs": {}}
+    if paged:
+        rec["page_size"] = page_size
     for name, (fn, args) in programs.items():
         t0 = time.time()
         with mesh:
@@ -324,6 +336,12 @@ def main(argv=None):
                     help="serve mode: admission prompt length")
     ap.add_argument("--max-total", type=int, default=2048,
                     help="serve mode: per-slot cache length")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve mode: lower the PAGED admission/decode "
+                         "pair (chunked prefill + page-map decode, "
+                         "DESIGN.md §15) instead of the ring pair")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="serve mode: tokens per cache page (--paged)")
     args = ap.parse_args(argv)
 
     configure_xla(args)
@@ -343,6 +361,8 @@ def main(argv=None):
             rec = run_serve_one(args.arch, args.mesh, slots=args.slots,
                                 max_prompt=args.max_prompt,
                                 max_total=args.max_total,
+                                paged=args.paged,
+                                page_size=args.page_size,
                                 verbose=args.out != "-")
         except Exception as e:  # noqa: BLE001 — report, don't crash
             rec = {"arch": args.arch, "shape": "serve", "mesh": args.mesh,
@@ -358,7 +378,8 @@ def main(argv=None):
             p = pathlib.Path(args.out)
             if p.is_dir():
                 p.mkdir(parents=True, exist_ok=True)
-                fname = p / f"dryrun_serve_{args.mesh}.json"
+                tag = "_paged" if args.paged else ""
+                fname = p / f"dryrun_serve{tag}_{args.mesh}.json"
             else:
                 fname = p
             fname.write_text(json.dumps(rec, indent=1))

@@ -1,9 +1,13 @@
 """Serving driver: batched prefill + decode of a model-zoo arch.
 
-Three modes:
+Four modes:
   direct      — one fixed batch, joint prefill, lockstep decode
   wave        — BatchScheduler: admit a wave, drain, admit the next
   continuous  — ContinuousScheduler: per-slot admission/retirement
+  paged       — PagedContinuousScheduler: block/page KV cache with
+                prefix sharing + chunked prefill (DESIGN.md §15);
+                tune with --page-size/--cache-pages/--prefill-chunk,
+                exercise prefix sharing with --prefix-template
 
 Multi-device: ``--mesh host|data|AxB`` serves sharded over this
 process's devices (params tensor-parallel over ``model``, cache leaves
@@ -29,6 +33,7 @@ import numpy as np
 
 
 def _run_scheduler(args, cfg, model, params, mesh):
+    import jax.numpy as jnp
     from repro.obs.sink import make_obs
     from repro.serving import Request, make_scheduler, run_trace
 
@@ -40,17 +45,35 @@ def _run_scheduler(args, cfg, model, params, mesh):
                           "mesh": args.mesh or "single",
                           "devices": 1 if mesh is None
                           else int(mesh.devices.size)})
-    sched = make_scheduler(args.scheduler, model, slots=args.batch,
-                           max_prompt=args.prompt_len,
-                           max_total=args.prompt_len + args.gen,
-                           temperature=args.temperature, seed=args.seed,
-                           obs=obs, mesh=mesh)
+    cache_dtype = {"f32": jnp.float32, "bf16": jnp.bfloat16}[
+        args.cache_dtype]
+    kw = dict(slots=args.batch, max_prompt=args.prompt_len,
+              max_total=args.prompt_len + args.gen,
+              temperature=args.temperature, seed=args.seed,
+              cache_dtype=cache_dtype, obs=obs, mesh=mesh)
+    if args.scheduler == "paged":
+        kw["page_size"] = args.page_size
+        if args.cache_pages:
+            kw["cache_pages"] = args.cache_pages
+        if args.prefill_chunk:
+            kw["prefill_chunk"] = args.prefill_chunk
+    sched = make_scheduler(args.scheduler, model, **kw)
     arrivals = []
     step = 0
+    tmpl = None
+    if args.prefix_template:
+        # shared template prefix across every prompt — the prefix-
+        # sharing trace: after the first admission the trie serves the
+        # template's full pages to everyone else
+        tmpl = rng.integers(1, cfg.vocab_size,
+                            size=args.prefix_template).astype(np.int32)
     for rid in range(args.requests):
         plen = int(rng.integers(max(1, args.prompt_len // 4),
                                 args.prompt_len + 1))
         prompt = rng.integers(1, cfg.vocab_size, size=plen).astype(np.int32)
+        if tmpl is not None:
+            prompt = np.concatenate(
+                [tmpl, prompt])[:args.prompt_len].astype(np.int32)
         arrivals.append((step, Request(rid=rid, prompt=prompt,
                                        max_new=args.gen)))
         step += int(rng.poisson(args.arrival_gap))
@@ -65,7 +88,9 @@ def _run_scheduler(args, cfg, model, params, mesh):
                          submit=r.submit, admit=r.admit,
                          first_token=r.first_token,
                          queue_latency=r.queue_latency, ttft=r.ttft,
-                         decode=r.decode, budget=r.budget)
+                         decode=r.decode, budget=r.budget,
+                         prefill_chunks=r.prefill_chunks,
+                         prefix_pages_reused=r.prefix_pages_reused)
     finally:
         obs.close()
     dt = time.time() - t0
@@ -85,6 +110,13 @@ def _run_scheduler(args, cfg, model, params, mesh):
                   f"p95={np.percentile(ql, 95):.0f}  "
                   f"ttft: p50={np.percentile(tt, 50):.0f} "
                   f"p95={np.percentile(tt, 95):.0f}")
+    if args.scheduler == "paged":
+        reused = sum(r.prefix_pages_reused for r in stats.records)
+        print(f"pages: size={sched.page_size} pool={sched.cache_pages} "
+              f"free={sched.table.num_free} "
+              f"prefix_hit_rate={sched.prefix_hit_rate:.2f} "
+              f"pages_reused={reused} "
+              f"deferrals={sched.page_deferrals}")
     return 0
 
 
@@ -98,11 +130,28 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--scheduler", default="direct",
-                    choices=["direct", "wave", "continuous"],
-                    help="direct: one fixed batch; wave/continuous: "
-                         "request schedulers over --requests arrivals")
+                    choices=["direct", "wave", "continuous", "paged"],
+                    help="direct: one fixed batch; wave/continuous/"
+                         "paged: request schedulers over --requests "
+                         "arrivals")
     ap.add_argument("--requests", type=int, default=8,
                     help="number of requests for scheduler modes")
+    ap.add_argument("--cache-dtype", default="f32",
+                    choices=["f32", "bf16"],
+                    help="KV/state cache storage dtype (compute stays "
+                         "f32)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged scheduler: tokens per cache page")
+    ap.add_argument("--cache-pages", type=int, default=0,
+                    help="paged scheduler: total page-pool size incl. "
+                         "the dummy page (0 = ring-equivalent capacity); "
+                         "smaller pools trade capacity for deferrals")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged scheduler: prefill chunk length in "
+                         "tokens, page-size multiple (0 = one-shot)")
+    ap.add_argument("--prefix-template", type=int, default=0,
+                    help="share a random N-token template prefix across "
+                         "all prompts (prefix-sharing trace)")
     ap.add_argument("--arrival-gap", type=float, default=2.0,
                     help="mean Poisson inter-arrival gap (decode steps)")
     ap.add_argument("--mesh", default=None,

@@ -357,3 +357,89 @@ def build_serve_program(model: ModelApi, mesh: Mesh, *,
     dec_args = (params_abs, jax.ShapeDtypeStruct((slots, 1), i32),
                 cache_abs, pos_abs)
     return {"admission": (adm, adm_args), "decode": (dec, dec_args)}
+
+
+def build_paged_serve_program(model: ModelApi, mesh: Mesh, *,
+                              slots: int = 8, max_prompt: int = 1024,
+                              max_total: int = 2048, page_size: int = 64,
+                              cache_pages: int | None = None,
+                              prefill_chunk: int | None = None,
+                              dtype=jnp.bfloat16,
+                              rules: ShardingRules | None = None,
+                              cache_rules: ShardingRules | None = None):
+    """The PAGED serving pair on a production mesh (DESIGN.md §15):
+
+    * ``admission_chunk`` — one chunked-prefill step writing a
+      ``prefill_chunk``-token piece of a prompt into the slot's pages
+      (traced start/valid/page-row, so one lowering serves every chunk
+      of every prompt);
+    * ``decode`` — one paged decode step over all slots, gathering K/V
+      through the ``(slots, pages_per_slot)`` page map (cache donated,
+      mirroring the scheduler's steady state).
+
+    Returns ``{"admission_chunk": (fn, args), "decode": (fn, args)}``
+    pinned exactly as ``PagedContinuousScheduler`` pins them.
+    """
+    from repro.serving import pages_per_slot, serve_shardings
+    cfg = model.cfg
+    if cfg.kind in ("vlm", "encdec", "audio"):
+        raise ValueError(
+            f"serve program is token-only; arch kind {cfg.kind!r} needs "
+            "frontend inputs the request path does not carry")
+    P = pages_per_slot(max_total, page_size)
+    if cache_pages is None:
+        cache_pages = slots * P + 1
+    if prefill_chunk is None:
+        prefill_chunk = -(-max_prompt // page_size) * page_size
+    assert prefill_chunk % page_size == 0
+    pdt = param_dtype_for(cfg)
+    sh = serve_shardings(model, mesh, slots=slots, max_total=max_total,
+                         dtype=dtype, param_dtype=pdt,
+                         page_size=page_size, cache_pages=cache_pages,
+                         rules=rules, cache_rules=cache_rules)
+    params_abs, _ = model.abstract_params(dtype=pdt)
+    cache_abs = model.abstract_paged_cache(slots, cache_pages, page_size,
+                                           dtype)
+    i32 = jnp.int32
+    logits_abs = jax.ShapeDtypeStruct((slots, 1, cfg.padded_vocab), dtype)
+    pos_abs = jax.ShapeDtypeStruct((slots,), i32)
+
+    def admission_chunk(params, cache, logits, tokens, start, valid, row,
+                        slot):
+        c1, lg = model.prefill_chunk(params, cache, tokens, start, valid,
+                                     row, slot, dtype=dtype)
+        logits = jax.lax.dynamic_update_slice(
+            logits, lg.astype(logits.dtype), (slot, 0, 0))
+        return c1, logits
+
+    adm = jax.jit(
+        admission_chunk,
+        in_shardings=(sh.params, sh.paged_cache, sh.logits,
+                      sh.replicated, sh.replicated, sh.replicated,
+                      sh.replicated, sh.replicated),
+        out_shardings=(sh.paged_cache, sh.logits),
+        donate_argnums=(1,),
+    )
+    adm_args = (params_abs, cache_abs, logits_abs,
+                jax.ShapeDtypeStruct((1, prefill_chunk), i32),
+                jax.ShapeDtypeStruct((), i32),
+                jax.ShapeDtypeStruct((), i32),
+                jax.ShapeDtypeStruct((P,), i32),
+                jax.ShapeDtypeStruct((), i32))
+
+    def decode(params, token, cache, pos, page_map, live):
+        return model.decode_step_paged(params, token, cache, pos,
+                                       page_map, live, dtype=dtype)
+
+    dec = jax.jit(
+        decode,
+        in_shardings=(sh.params, sh.token, sh.paged_cache, sh.pos,
+                      sh.page_map, sh.live),
+        out_shardings=(sh.logits, sh.paged_cache),
+        donate_argnums=(2,),
+    )
+    dec_args = (params_abs, jax.ShapeDtypeStruct((slots, 1), i32),
+                cache_abs, pos_abs,
+                jax.ShapeDtypeStruct((slots, P), i32),
+                jax.ShapeDtypeStruct((slots,), jnp.bool_))
+    return {"admission_chunk": (adm, adm_args), "decode": (dec, dec_args)}

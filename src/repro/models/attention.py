@@ -568,6 +568,95 @@ def cache_logical_axes():
             "v": ("cache_batch", "cache_seq", "cache_kv_heads", "head_dim")}
 
 
+def init_paged_cache(cfg, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16):
+    """Paged cache leaves for ONE layer: a pool of fixed-size pages
+    shared by every slot (page 0 is the reserved dummy page)."""
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((num_pages, page_size, K, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, K, hd), dtype),
+    }
+
+
+def paged_cache_logical_axes():
+    ax = ("cache_pages", "page_off", "cache_kv_heads", "head_dim")
+    return {"k": ax, "v": ax}
+
+
+def _paged_scatter(kv, k_new, v_new, flat):
+    """Write per-row K/V (B, K, hd) at flat page offsets (B,) into the
+    (num_pages, page_size, K, hd) pool; returns the updated pool pair.
+    Rows routed to the dummy page may collide — nobody reads page 0
+    unmasked, so last-writer-wins is fine."""
+    N, ps = kv["k"].shape[:2]
+    kf = kv["k"].reshape((N * ps,) + kv["k"].shape[2:])
+    vf = kv["v"].reshape((N * ps,) + kv["v"].shape[2:])
+    kf = kf.at[flat].set(k_new.astype(kf.dtype))
+    vf = vf.at[flat].set(v_new.astype(vf.dtype))
+    return kf.reshape(kv["k"].shape), vf.reshape(kv["v"].shape)
+
+
+def paged_decode_attention(p, cfg, x, cache, pos, page_map, *, window=0,
+                           use_kernel=False, interpret=None):
+    """One-token attention step against a PAGED cache.
+
+    x: (B, 1, d); cache: {'k','v'} (num_pages, page_size, K, hd);
+    pos: (B,) absolute positions; page_map: (B, pages_per_slot) int32 —
+    each slot's logical pages in position order (dummy page 0 for
+    unallocated entries). Unlike the ring path, the paged cache stores
+    FULL positions and masks a [pos-window, pos] band, so sliding archs
+    match the ring outputs without wraparound arithmetic.
+
+    Returns (out, new_cache). With ``use_kernel`` the gather+softmax
+    runs in the Pallas paged-decode kernel (interpret mode off-TPU).
+    """
+    B = x.shape[0]
+    q = _project_q(p, cfg, x)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+
+    k_new, v_new = _project_kv(p, cfg, x)
+    if cfg.rope:
+        q = rope(q.reshape(B, 1, -1, cfg.head_dim), pos[:, None],
+                 cfg.rope_theta).reshape(q.shape)
+        k_new = rope(k_new, pos[:, None], cfg.rope_theta)
+    from repro.dist.sharding import hint
+    q = hint(q, ("pod", "data"), None, "model", None, None)
+    k_new = hint(k_new, ("pod", "data"), None, "model", None)
+    v_new = hint(v_new, ("pod", "data"), None, "model", None)
+
+    N, ps = cache["k"].shape[:2]
+    P = page_map.shape[1]
+    # the new token's page: slots mid-prefill / retired carry an
+    # all-dummy page-map row, so their write lands in the page-0 sink
+    pg = jnp.take_along_axis(page_map,
+                             jnp.clip(pos // ps, 0, P - 1)[:, None],
+                             axis=1)[:, 0]
+    flat = pg * ps + pos % ps                        # (B,)
+    k_pages, v_pages = _paged_scatter(cache, k_new[:, 0], v_new[:, 0],
+                                      flat)
+
+    if use_kernel:
+        from repro.kernels.paged_attn import paged_decode
+        out = paged_decode(q[:, 0], k_pages, v_pages, page_map, pos,
+                           window=window, interpret=interpret)
+        out = out[:, None].astype(x.dtype)           # (B, 1, K, G, hd)
+    else:
+        kg = k_pages[page_map].reshape(B, P * ps, *k_pages.shape[2:])
+        vg = v_pages[page_map].reshape(B, P * ps, *v_pages.shape[2:])
+        scale = cfg.head_dim ** -0.5
+        s = _gqa_scores(q * scale, kg.astype(q.dtype))   # (B,K,G,1,S)
+        k_pos = jnp.arange(P * ps)
+        valid = k_pos[None, :] <= pos[:, None]
+        if window:
+            valid = valid & (k_pos[None, :] > pos[:, None] - window)
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        out = _gqa_out(w, vg.astype(q.dtype)).astype(x.dtype)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype), {"k": k_pages, "v": v_pages}
+
+
 def decode_attention(p, cfg, x, cache, pos, *, window=0,
                      kv_source_cache=None):
     """One-token attention step.

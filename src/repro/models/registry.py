@@ -94,6 +94,36 @@ class ModelApi:
     def cache_axes(self, long_context: bool = False):
         return serve.cache_logical_axes_tree(self.cfg, long_context)
 
+    # -- paged serving (DESIGN.md §15) ----------------------------------
+    def prefill_chunk(self, params, cache, tokens, start, valid, page_row,
+                      slot, *, dtype=jnp.float32, serve_window=0):
+        return serve.prefill_chunk(params, self.cfg, cache, tokens, start,
+                                   valid, page_row, slot, dtype=dtype,
+                                   serve_window=serve_window)
+
+    def decode_step_paged(self, params, token, cache, pos, page_map, live,
+                          *, dtype=jnp.bfloat16, serve_window=0,
+                          use_kernel=False):
+        return serve.decode_step_paged(params, self.cfg, token, cache, pos,
+                                       page_map, live, dtype=dtype,
+                                       serve_window=serve_window,
+                                       use_kernel=use_kernel)
+
+    def init_paged_cache(self, slots, num_pages, page_size,
+                         dtype=jnp.bfloat16, mesh=None, cache_rules=None):
+        return serve.init_paged_cache_tree(self.cfg, slots, num_pages,
+                                           page_size, dtype, mesh=mesh,
+                                           cache_rules=cache_rules)
+
+    def abstract_paged_cache(self, slots, num_pages, page_size,
+                             dtype=jnp.bfloat16):
+        return jax.eval_shape(
+            lambda: serve.init_paged_cache_tree(self.cfg, slots, num_pages,
+                                                page_size, dtype))
+
+    def paged_cache_axes(self):
+        return serve.paged_cache_logical_axes_tree(self.cfg)
+
     # -- abstract inputs (dry-run) ---------------------------------------
     def input_specs(self, shape: InputShape, *, serve_window: int = 0,
                     cache_dtype=jnp.bfloat16) -> dict:

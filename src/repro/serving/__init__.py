@@ -1,29 +1,38 @@
 """Public serving API: engine primitives, schedulers, sampling, and
-the serving sharding layer (DESIGN.md §11, §14).
+the serving sharding layer (DESIGN.md §11, §14, §15).
 
 Import from here — ``launch/serve.py``, benchmarks, and tests should
 not deep-import ``repro.serving.*`` modules.
 """
 from repro.serving.engine import (
     init_cache_tree, cache_logical_axes_tree, prefill, decode_step,
-    write_cache_slot,
+    write_cache_slot, init_paged_cache_tree, paged_cache_logical_axes_tree,
+    prefill_chunk, decode_step_paged,
+)
+from repro.serving.pages import (
+    DUMMY_PAGE, PageTable, PrefixTrie, pages_per_slot,
 )
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import (
-    BatchScheduler, ContinuousScheduler, Request, RequestRecord,
-    SchedulerStats, make_scheduler, run_trace,
+    BatchScheduler, ContinuousScheduler, PagedContinuousScheduler,
+    Request, RequestRecord, SchedulerStats, make_scheduler, run_trace,
 )
 from repro.serving.sharding import (
     SERVE_CACHE_RULES, SERVE_PARAM_RULES, ServeShardings,
-    cache_shardings, param_shardings, serve_shardings, shard_params,
+    cache_shardings, paged_cache_shardings, param_shardings,
+    serve_shardings, shard_params,
 )
 
 __all__ = [
     "init_cache_tree", "cache_logical_axes_tree", "prefill",
-    "decode_step", "write_cache_slot", "sample_tokens",
-    "BatchScheduler", "ContinuousScheduler", "Request", "RequestRecord",
-    "SchedulerStats", "make_scheduler", "run_trace",
+    "decode_step", "write_cache_slot", "init_paged_cache_tree",
+    "paged_cache_logical_axes_tree", "prefill_chunk", "decode_step_paged",
+    "DUMMY_PAGE", "PageTable", "PrefixTrie", "pages_per_slot",
+    "sample_tokens",
+    "BatchScheduler", "ContinuousScheduler", "PagedContinuousScheduler",
+    "Request", "RequestRecord", "SchedulerStats", "make_scheduler",
+    "run_trace",
     "SERVE_CACHE_RULES", "SERVE_PARAM_RULES", "ServeShardings",
-    "cache_shardings", "param_shardings", "serve_shardings",
-    "shard_params",
+    "cache_shardings", "paged_cache_shardings", "param_shardings",
+    "serve_shardings", "shard_params",
 ]

@@ -689,3 +689,471 @@ def write_cache_slot(cfg, cache, one_cache, slot, *, pos=None,
     one_pos = jnp.asarray(one_pos, jnp.int32).reshape(())
     new_pos = pos.at[slot].set(one_pos)
     return new_cache, new_pos
+
+
+# ---------------------------------------------------------------------------
+# paged cache (DESIGN.md §15): attention K/V in a shared page pool,
+# recurrent state per-slot; chunked prefill + page-map decode
+# ---------------------------------------------------------------------------
+
+PAGED_KINDS = ("dense", "moe", "ssm", "hybrid")
+
+
+def init_paged_cache_tree(cfg, slots: int, num_pages: int, page_size: int,
+                          dtype=jnp.bfloat16, mesh=None, cache_rules=None):
+    """Paged cache pytree: attention K/V leaves become a page pool
+    ``(layers, num_pages, page_size, K, hd)`` shared by all slots (page
+    0 reserved as the dummy sink); SSM/RG-LRU/conv state is O(1) per
+    request and stays per-slot, identical to the ring layout.
+    """
+    if cfg.kind not in PAGED_KINDS:
+        raise ValueError(
+            f"paged serving is token-only; arch kind {cfg.kind!r} is "
+            "not served by the request schedulers")
+    tree = _init_paged_cache_tree(cfg, slots, num_pages, page_size, dtype)
+    if mesh is None:
+        return tree
+    from repro.serving.sharding import SERVE_CACHE_RULES
+    rules = cache_rules or SERVE_CACHE_RULES
+    axes = paged_cache_logical_axes_tree(cfg)
+    from jax.sharding import NamedSharding
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    flat_ax = jax.tree_util.tree_flatten(
+        axes, is_leaf=lambda x: isinstance(x, tuple))[0]
+    assert len(flat) == len(flat_ax)
+    out = [jax.device_put(l, NamedSharding(
+        mesh, rules.spec_for_shape(tuple(ax), tuple(l.shape), mesh)))
+        for l, ax in zip(flat, flat_ax)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _init_paged_cache_tree(cfg, slots, num_pages, page_size, dtype):
+    kind = cfg.kind
+
+    def stack(make_one, n):
+        one = make_one()
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), one)
+
+    pool = lambda: attn.init_paged_cache(cfg, num_pages, page_size,  # noqa: E731
+                                         dtype)
+    if kind == "dense" or (kind == "moe" and cfg.moe_every == 1):
+        return {"layers": stack(pool, cfg.num_layers)}
+    if kind == "moe":
+        n_groups = cfg.num_layers // cfg.moe_every
+        def group():
+            g = {f"dense_{i}": pool() for i in range(cfg.moe_every - 1)}
+            g["moe"] = pool()
+            return g
+        return {"groups": stack(group, n_groups)}
+    if kind == "ssm":
+        return {"layers": stack(
+            lambda: ssmm.init_ssm_cache(cfg, slots, dtype), cfg.num_layers)}
+    if kind == "hybrid":
+        period = cfg.local_attn_every or 3
+        n_groups = cfg.num_layers // period
+        rem = cfg.num_layers - n_groups * period
+        def group():
+            g = {f"rec_{i}": rgm.init_rglru_cache(cfg, slots, dtype)
+                 for i in range(period - 1)}
+            g["attn"] = pool()
+            return g
+        out = {}
+        if n_groups:
+            out["groups"] = stack(group, n_groups)
+        if rem:
+            out["tail"] = stack(
+                lambda: rgm.init_rglru_cache(cfg, slots, dtype), rem)
+        return out
+    raise ValueError(kind)
+
+
+def paged_cache_logical_axes_tree(cfg):
+    """Logical axes matching init_paged_cache_tree's structure."""
+    def with_layers(d):
+        return jax.tree.map(lambda a: ("layers",) + tuple(a), d,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    kind = cfg.kind
+    pool = attn.paged_cache_logical_axes
+    if kind == "dense" or (kind == "moe" and cfg.moe_every == 1):
+        return {"layers": with_layers(pool())}
+    if kind == "moe":
+        g = {f"dense_{i}": pool() for i in range(cfg.moe_every - 1)}
+        g["moe"] = pool()
+        return {"groups": with_layers(g)}
+    if kind == "ssm":
+        return {"layers": with_layers(ssmm.ssm_cache_logical_axes(cfg))}
+    if kind == "hybrid":
+        period = cfg.local_attn_every or 3
+        rem = cfg.num_layers - (cfg.num_layers // period) * period
+        g = {f"rec_{i}": rgm.rglru_cache_logical_axes(cfg)
+             for i in range(period - 1)}
+        g["attn"] = pool()
+        out = {}
+        if cfg.num_layers // period:
+            out["groups"] = with_layers(g)
+        if rem:
+            out["tail"] = with_layers(rgm.rglru_cache_logical_axes(cfg))
+        return out
+    raise ValueError(kind)
+
+
+def _slot_slice(leaf, slot):
+    return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=0)
+
+
+def _slot_write(leaf, val, slot):
+    return jax.lax.dynamic_update_slice_in_dim(
+        leaf, val.astype(leaf.dtype), slot, axis=0)
+
+
+def _chunk_attn_layer(lp, cfg, x, kv, *, mode, window, start, valid,
+                      page_row):
+    """One attn layer over a prefill chunk, writing K/V into pages.
+
+    x: (1, C, d); kv: {'k','v'} page pools; start/valid: traced scalars
+    (chunk offset, #real tokens in the chunk); page_row:
+    (pages_per_slot,) this slot's pages. Rows j >= valid are padding:
+    their writes go to the dummy page, their queries never feed the
+    cache or the logits, and MoE routing masks them out.
+    """
+    from repro.dist.sharding import hint
+    from repro.models.common import rope as rope_fn
+    B, C, _ = x.shape
+    h = apply_norm(cfg, lp["ln_attn"], x)
+    q = attn._project_q(lp["attn"], cfg, h)
+    k, v = attn._project_kv(lp["attn"], cfg, h)
+    q = hint(q, ("pod", "data"), None, "model", None, None)
+    k = hint(k, ("pod", "data"), None, "model", None)
+    v = hint(v, ("pod", "data"), None, "model", None)
+    if cfg.rope:
+        tpos = start + jnp.arange(C)
+        q = rope_fn(q.reshape(B, C, -1, cfg.head_dim), tpos,
+                    cfg.rope_theta).reshape(q.shape)
+        k = rope_fn(k, tpos, cfg.rope_theta)
+    q = hint(q, ("pod", "data"), None, "model", None, None)
+    k = hint(k, ("pod", "data"), None, "model", None)
+    v = hint(v, ("pod", "data"), None, "model", None)
+
+    N, ps = kv["k"].shape[:2]
+    P = page_row.shape[0]
+    j = jnp.arange(C)
+    tgt = start + j                                  # absolute positions
+    pg = page_row[jnp.clip(tgt // ps, 0, P - 1)]
+    flat = jnp.where(j < valid, pg * ps + tgt % ps, j % ps)
+    k_pages, v_pages = attn._paged_scatter(kv, k[0], v[0], flat)
+
+    kg = k_pages[page_row].reshape(1, P * ps, *k_pages.shape[2:])
+    vg = v_pages[page_row].reshape(1, P * ps, *v_pages.shape[2:])
+    out = attn.simple_attention(q, kg.astype(q.dtype), vg.astype(q.dtype),
+                                mode=mode, window=window, q_offset=start,
+                                k_len=start + valid)
+    out = out.reshape(B, C, cfg.num_heads * cfg.head_dim)
+    x = x + out @ lp["attn"]["wo"].astype(x.dtype)
+
+    h = apply_norm(cfg, lp["ln_mlp"], x)
+    if "moe" in lp:
+        h, _ = moem.apply_moe(lp["moe"], cfg, h,
+                              token_mask=(j < valid)[None, :])
+    else:
+        h = mlpm.apply_mlp(lp["mlp"], cfg, h)
+    return x + h, {"k": k_pages, "v": v_pages}
+
+
+def _chunk_ssm_layer(lp, cfg, x, c, *, slot, start, valid):
+    """One SSM layer over a prefill chunk, carrying slot state across
+    chunks: conv context + SSD ``h0`` are read from (and written back
+    to) the per-slot cache leaves; ``start == 0`` starts fresh."""
+    h = apply_norm(cfg, lp["ln"], x)
+    b, C, _ = h.shape
+    d_in, H, P, S = ssmm._dims(cfg)
+    K = cfg.ssm_conv_width
+    fresh = start == 0
+    h0 = jnp.where(fresh, 0.0, _slot_slice(c["h"], slot))
+    cx0 = jnp.where(fresh, 0.0, _slot_slice(c["conv_x"], slot))
+    cB0 = jnp.where(fresh, 0.0, _slot_slice(c["conv_B"], slot))
+    cC0 = jnp.where(fresh, 0.0, _slot_slice(c["conv_C"], slot))
+
+    proj = h @ lp["ssm"]["w_in"].astype(h.dtype)
+    z, xs, Bm, Cm, dt_raw = ssmm._split_proj(cfg, proj)
+    xs_pre, Bm_pre, Cm_pre = xs, Bm, Cm
+    xs, _ = ssmm._causal_conv(xs, lp["ssm"]["conv_x"], cx0)
+    Bm, _ = ssmm._causal_conv(Bm, lp["ssm"]["conv_B"], cB0)
+    Cm, _ = ssmm._causal_conv(Cm, lp["ssm"]["conv_C"], cC0)
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["ssm"]["dt_bias"].astype(jnp.float32))
+    # dt = 0 freezes the recurrence on pad rows (same trick as the
+    # mixed-length one-shot prefill), so h_fin is the state at valid-1
+    keep = (jnp.arange(C)[None, :] < valid)[..., None]
+    dt = jnp.where(keep, dt, 0.0)
+    A = -jnp.exp(lp["ssm"]["A_log"].astype(jnp.float32))
+    y, h_fin = ssmm.ssd_chunked(xs.reshape(b, C, H, P), dt, dt * A,
+                                Bm, Cm, h0=h0, chunk=cfg.ssm_chunk)
+    y = y + xs.reshape(b, C, H, P) * lp["ssm"]["D"].astype(
+        h.dtype)[None, None, :, None]
+    y = y.reshape(b, C, d_in) * jax.nn.silu(z)
+    x = x + y @ lp["ssm"]["w_out"].astype(h.dtype)
+
+    def conv_next(state0, pre):
+        if K <= 1:
+            return state0
+        xp = jnp.concatenate([state0.astype(pre.dtype), pre], axis=1)
+        return jax.lax.dynamic_slice_in_dim(xp, valid, K - 1, axis=1)
+
+    new = {"h": _slot_write(c["h"], h_fin, slot),
+           "conv_x": _slot_write(c["conv_x"],
+                                 conv_next(cx0, xs_pre), slot),
+           "conv_B": _slot_write(c["conv_B"],
+                                 conv_next(cB0, Bm_pre), slot),
+           "conv_C": _slot_write(c["conv_C"],
+                                 conv_next(cC0, Cm_pre), slot)}
+    return x, new
+
+
+def _chunk_rec_layer(lp, cfg, x, c, *, slot, start, valid):
+    """One RG-LRU layer over a prefill chunk with carried (h, conv)
+    state: the inbound hidden state is folded into the first scan
+    element (h_0 = a_0 h_in + b_0), which continues the recurrence
+    exactly."""
+    dt = x.dtype
+    K = cfg.rglru_conv_width
+    h = apply_norm(cfg, lp["ln_rec"], x)
+    ga = jax.nn.gelu(h @ lp["rec"]["w_gelu"].astype(dt), approximate=True)
+    xb = h @ lp["rec"]["w_rec"].astype(dt)
+    xb_pre = xb
+    fresh = start == 0
+    h0 = jnp.where(fresh, 0.0, _slot_slice(c["h"], slot))   # (1, w)
+    conv0 = jnp.where(fresh, 0.0, _slot_slice(c["conv"], slot))
+    xb, _ = rgm._causal_conv(xb, lp["rec"]["conv"], conv0)
+    a, beta = rgm._gates(lp["rec"], xb)
+    b = beta * xb.astype(jnp.float32)
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (ga.astype(jnp.float32) * hs).astype(dt)
+    x = x + y @ lp["rec"]["w_out"].astype(dt)
+    x = x + mlpm.apply_mlp(lp["mlp"], cfg,
+                           apply_norm(cfg, lp["ln_mlp"], x))
+    h_last = jax.lax.dynamic_slice_in_dim(
+        hs, jnp.clip(valid - 1, 0), 1, axis=1)[:, 0]
+
+    if K > 1:
+        xp = jnp.concatenate([conv0.astype(xb_pre.dtype), xb_pre], axis=1)
+        conv1 = jax.lax.dynamic_slice_in_dim(xp, valid, K - 1, axis=1)
+    else:
+        conv1 = conv0
+    new = {"h": _slot_write(c["h"], h_last, slot),
+           "conv": _slot_write(c["conv"], conv1, slot)}
+    return x, new
+
+
+def prefill_chunk(p, cfg, cache, tokens, start, valid, page_row, slot,
+                  *, dtype=jnp.float32, serve_window: int = 0):
+    """Process ONE page_size-multiple chunk of a prompt into the paged
+    cache (chunked prefill, DESIGN.md §15).
+
+    tokens: (1, C) right-padded chunk; start: traced absolute offset of
+    the chunk (a page_size multiple — or the shared-prefix length when
+    earlier pages came from the prefix trie); valid: #real tokens in
+    the chunk; page_row: (pages_per_slot,) int32 page ids; slot: traced
+    recurrent-state lane. One jit signature serves single-shot prefill
+    (C >= prompt length) and streamed long prompts alike.
+
+    Returns (new_cache, logits at token ``start + valid - 1``). The
+    caller flips the slot live only after the LAST chunk — until then
+    the decode-visible page map row stays all-dummy, so interleaved
+    decode ticks cannot observe a half-written prefix.
+    """
+    kind = cfg.kind
+    if kind not in PAGED_KINDS:
+        raise ValueError(kind)
+    B, C = tokens.shape
+    start = jnp.asarray(start, jnp.int32).reshape(())
+    valid = jnp.asarray(valid, jnp.int32).reshape(())
+    slot = jnp.asarray(slot, jnp.int32).reshape(())
+    page_row = jnp.asarray(page_row, jnp.int32)
+    x = _embed_tokens(p, cfg, tokens, dtype)
+    mode, window = "causal", 0
+    if cfg.sliding_window:
+        mode, window = "sliding", cfg.sliding_window
+    elif serve_window and kind not in ("ssm", "hybrid"):
+        mode, window = "sliding", serve_window
+
+    def attn_body(lp, xx, c):
+        return _chunk_attn_layer(lp, cfg, xx, c, mode=mode, window=window,
+                                 start=start, valid=valid,
+                                 page_row=page_row)
+
+    def scan(x, stacked_p, stacked_c, body):
+        def f(xx, sc):
+            lp, c = sc
+            return body(lp, xx, c)
+        return jax.lax.scan(f, x, (stacked_p, stacked_c))
+
+    if kind == "dense" or (kind == "moe" and cfg.moe_every == 1):
+        x, new_cache = scan(x, p["layers"], cache["layers"], attn_body)
+        new_cache = {"layers": new_cache}
+    elif kind == "moe":
+        def body(lp, xx, c):
+            new = {}
+            for i in range(cfg.moe_every - 1):
+                xx, new[f"dense_{i}"] = attn_body(
+                    lp[f"dense_{i}"], xx, c[f"dense_{i}"])
+            xx, new["moe"] = attn_body(lp["moe"], xx, c["moe"])
+            return xx, new
+        x, new_cache = scan(x, p["groups"], cache["groups"], body)
+        new_cache = {"groups": new_cache}
+    elif kind == "ssm":
+        def body(lp, xx, c):
+            return _chunk_ssm_layer(lp, cfg, xx, c, slot=slot,
+                                    start=start, valid=valid)
+        x, new_cache = scan(x, p["layers"], cache["layers"], body)
+        new_cache = {"layers": new_cache}
+    elif kind == "hybrid":
+        period = cfg.local_attn_every or 3
+        def body(lp, xx, c):
+            new = {}
+            for i in range(period - 1):
+                xx, new[f"rec_{i}"] = _chunk_rec_layer(
+                    lp[f"rec_{i}"], cfg, xx, c[f"rec_{i}"],
+                    slot=slot, start=start, valid=valid)
+            xx, new["attn"] = _chunk_attn_layer(
+                lp["attn"], cfg, xx, c["attn"], mode="sliding",
+                window=cfg.attention_window, start=start, valid=valid,
+                page_row=page_row)
+            return xx, new
+        new_cache = {}
+        if "groups" in p:
+            x, gnew = scan(x, p["groups"], cache["groups"], body)
+            new_cache["groups"] = gnew
+        if "tail" in p:
+            def tail_body(lp, xx, c):
+                return _chunk_rec_layer(lp, cfg, xx, c, slot=slot,
+                                        start=start, valid=valid)
+            x, tnew = scan(x, p["tail"], cache["tail"], tail_body)
+            new_cache["tail"] = tnew
+    else:
+        raise ValueError(kind)
+
+    x = apply_norm(cfg, p["ln_final"], x)
+    x_last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.clip(valid - 1, 0), 1, axis=1)        # (1, 1, d)
+    logits = _unembed(p, cfg, x_last)
+    return new_cache, logits
+
+
+def _gate_live(new, old, live):
+    """Keep ``old`` on non-live lanes (mid-prefill / retired slots must
+    not have their carried recurrent state trampled by decode ticks).
+    Leaves with a leading slots axis only — page pools self-protect via
+    the dummy page."""
+    m = live.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(m, new, old)
+
+
+def decode_step_paged(p, cfg, token, cache, pos, page_map, live, *,
+                      dtype=jnp.bfloat16, serve_window: int = 0,
+                      use_kernel: bool = False):
+    """One-token generation step against the PAGED cache.
+
+    token: (B, 1); cache: tree from init_paged_cache_tree; pos: (B,);
+    page_map: (B, pages_per_slot) int32 (dummy rows for inactive
+    slots); live: (B,) bool — recurrent-state updates are masked off
+    for non-live lanes, and their attention writes land in the dummy
+    page via the page map. Returns (logits, new_cache).
+    """
+    kind = cfg.kind
+    if kind not in PAGED_KINDS:
+        raise ValueError(kind)
+    B = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    live = jnp.asarray(live, bool).reshape(B)
+    x = _embed_tokens(p, cfg, token, dtype)
+    w = effective_window(cfg, serve_window)
+
+    def attn_dec(lp, xx, c):
+        h = apply_norm(cfg, lp["ln_attn"], xx)
+        out, c_new = attn.paged_decode_attention(
+            lp["attn"], cfg, h, c, pos, page_map, window=w,
+            use_kernel=use_kernel)
+        xx = xx + out
+        h = apply_norm(cfg, lp["ln_mlp"], xx)
+        if "moe" in lp:
+            h, _ = moem.apply_moe(lp["moe"], cfg, h)
+        else:
+            h = mlpm.apply_mlp(lp["mlp"], cfg, h)
+        return xx + h, c_new
+
+    def ssm_dec(lp, xx, c):
+        h = apply_norm(cfg, lp["ln"], xx)
+        y, c_new = ssmm.decode_ssm(lp["ssm"], cfg, h, c)
+        c_new = jax.tree.map(lambda n, o: _gate_live(n, o, live), c_new, c)
+        return xx + y, c_new
+
+    def rec_dec(lp, xx, c):
+        h = apply_norm(cfg, lp["ln_rec"], xx)
+        y, c_new = rgm.decode_rglru(lp["rec"], cfg, h, c)
+        c_new = jax.tree.map(lambda n, o: _gate_live(n, o, live), c_new, c)
+        xx = xx + y
+        xx = xx + mlpm.apply_mlp(lp["mlp"], cfg,
+                                 apply_norm(cfg, lp["ln_mlp"], xx))
+        return xx, c_new
+
+    if kind == "dense" or (kind == "moe" and cfg.moe_every == 1):
+        def body(xx, sc):
+            lp, c = sc
+            return attn_dec(lp, xx, c)
+        x, new_cache = jax.lax.scan(body, x, (p["layers"], cache["layers"]))
+        new_cache = {"layers": new_cache}
+    elif kind == "moe":
+        def body(xx, sc):
+            lp, c = sc
+            new = {}
+            for i in range(cfg.moe_every - 1):
+                xx, new[f"dense_{i}"] = attn_dec(
+                    lp[f"dense_{i}"], xx, c[f"dense_{i}"])
+            xx, new["moe"] = attn_dec(lp["moe"], xx, c["moe"])
+            return xx, new
+        x, new_cache = jax.lax.scan(body, x, (p["groups"], cache["groups"]))
+        new_cache = {"groups": new_cache}
+    elif kind == "ssm":
+        def body(xx, sc):
+            lp, c = sc
+            return ssm_dec(lp, xx, c)
+        x, new_cache = jax.lax.scan(body, x, (p["layers"], cache["layers"]))
+        new_cache = {"layers": new_cache}
+    elif kind == "hybrid":
+        period = cfg.local_attn_every or 3
+        def body(xx, sc):
+            lp, c = sc
+            new = {}
+            for i in range(period - 1):
+                xx, new[f"rec_{i}"] = rec_dec(
+                    lp[f"rec_{i}"], xx, c[f"rec_{i}"])
+            xx, new["attn"] = attn_dec(lp["attn"], xx, c["attn"])
+            return xx, new
+        new_cache = {}
+        if "groups" in p:
+            x, gnew = jax.lax.scan(body, x,
+                                   (p["groups"], cache["groups"]))
+            new_cache["groups"] = gnew
+        if "tail" in p:
+            def tail_body(xx, sc):
+                lp, c = sc
+                return rec_dec(lp, xx, c)
+            x, tnew = jax.lax.scan(tail_body, x,
+                                   (p["tail"], cache["tail"]))
+            new_cache["tail"] = tnew
+    else:
+        raise ValueError(kind)
+
+    x = apply_norm(cfg, p["ln_final"], x)
+    logits = _unembed(p, cfg, x)
+    return logits, new_cache

@@ -51,6 +51,10 @@ class Request:
     admit_clock: int = -1
     first_token_clock: int = -1
     retire_clock: int = -1
+    # paged-scheduler provenance (DESIGN.md §15): how the prompt entered
+    # the cache — #prefill chunks run, #pages borrowed from the trie
+    prefill_chunks: int = 0
+    prefix_pages_reused: int = 0
 
 
 @dataclass
@@ -63,6 +67,8 @@ class RequestRecord:
     retire: int
     decode: int                     # tokens generated
     budget: int
+    prefill_chunks: int = 0
+    prefix_pages_reused: int = 0
 
     @property
     def queue_latency(self) -> int:
@@ -72,6 +78,13 @@ class RequestRecord:
     def ttft(self) -> int:
         return (self.first_token - self.submit
                 if self.first_token >= 0 else -1)
+
+    @property
+    def prefill_latency(self) -> int:
+        """Ticks between admission and the first sampled token — the
+        chunked-prefill share of TTFT (TTFT = queue_latency + this)."""
+        return (self.first_token - self.admit
+                if self.first_token >= 0 and self.admit >= 0 else -1)
 
 
 @dataclass
@@ -105,7 +118,8 @@ class _SchedulerBase:
     def __init__(self, model: ModelApi, *, slots: int = 4,
                  max_prompt: int = 64, max_total: int = 128,
                  temperature: float = 0.0, seed: int = 0,
-                 obs=NULL_OBS, mesh=None, rules=None, cache_rules=None):
+                 cache_dtype=jnp.float32, obs=NULL_OBS, mesh=None,
+                 rules=None, cache_rules=None, **shard_kw):
         assert max_prompt <= max_total
         if model.cfg.kind in ("vlm", "encdec", "audio"):
             raise ValueError(
@@ -117,6 +131,7 @@ class _SchedulerBase:
         self.max_prompt = max_prompt
         self.max_total = max_total
         self.temperature = temperature
+        self.cache_dtype = cache_dtype
         self.key = jax.random.PRNGKey(seed)
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
@@ -128,7 +143,8 @@ class _SchedulerBase:
             from repro.serving.sharding import serve_shardings
             self.shardings = serve_shardings(
                 model, mesh, slots=slots, max_total=max_total,
-                dtype=jnp.float32, rules=rules, cache_rules=cache_rules)
+                dtype=cache_dtype, rules=rules, cache_rules=cache_rules,
+                **shard_kw)
         # the step clock: one tick per step() call (admission attempts
         # and decode steps alike) — all Request stamps use this clock
         self.clock = 0
@@ -161,7 +177,24 @@ class _SchedulerBase:
         self.stats.records.append(RequestRecord(
             rid=req.rid, submit=req.submit_clock, admit=req.admit_clock,
             first_token=req.first_token_clock, retire=req.retire_clock,
-            decode=len(req.out_tokens), budget=req.budget))
+            decode=len(req.out_tokens), budget=req.budget,
+            prefill_chunks=req.prefill_chunks,
+            prefix_pages_reused=req.prefix_pages_reused))
+
+    # -- slot lifecycle hooks (overridden by the paged scheduler) -------
+    def _slot_ready(self, i: int) -> bool:
+        """Is slot ``i`` producing valid logits? (Paged slots are not
+        ready while their chunked prefill is still streaming in.)"""
+        return True
+
+    def _free_slot(self, i: int) -> None:
+        """Release slot ``i``'s resources after retirement."""
+        self.active[i] = None
+
+    def _work_pending(self) -> bool:
+        """Non-queue work in flight (e.g. unfinished chunked prefills)
+        that must keep ``run`` stepping even when no tokens came out."""
+        return False
 
     def _take_next(self) -> Optional[Request]:
         """Pop the next admissible request; zero-budget requests (prompt
@@ -186,7 +219,7 @@ class _SchedulerBase:
         """Append sampled tokens to live requests; retire exhausted ones."""
         emitted = 0
         for i, r in enumerate(self.active):
-            if r is None or r.done:
+            if r is None or r.done or not self._slot_ready(i):
                 continue
             r.out_tokens.append(int(tok_np[i]))
             if r.first_token_clock < 0:
@@ -194,7 +227,7 @@ class _SchedulerBase:
             emitted += 1
             if len(r.out_tokens) >= r.budget:
                 self._retire(r)
-                self.active[i] = None
+                self._free_slot(i)
         self.stats.tokens_generated += emitted
         return emitted
 
@@ -214,7 +247,8 @@ class _SchedulerBase:
         self.stats.decode_steps += 1
         self.stats.slot_steps += self.slots
         self.stats.live_slot_steps += sum(
-            r is not None for r in self.active)
+            r is not None and self._slot_ready(i)
+            for i, r in enumerate(self.active))
         return emitted
 
     def _tick(self) -> None:
@@ -232,7 +266,8 @@ class _SchedulerBase:
         with self.obs.span("run", scheduler=type(self).__name__,
                            slots=self.slots):
             while self.outstanding and steps < max_steps:
-                if self.step(params) == 0 and not self.queue:
+                if self.step(params) == 0 and not self.queue \
+                        and not self._work_pending():
                     break
                 steps += 1
         if self.outstanding:
@@ -248,21 +283,17 @@ class _SchedulerBase:
 class BatchScheduler(_SchedulerBase):
     """Slot-based wave batching (static shapes, per-slot pos)."""
 
-    def __init__(self, model: ModelApi, *, slots: int = 4,
-                 max_prompt: int = 64, max_total: int = 128,
-                 temperature: float = 0.0, seed: int = 0,
-                 obs=NULL_OBS, mesh=None, rules=None, cache_rules=None):
-        super().__init__(model, slots=slots, max_prompt=max_prompt,
-                         max_total=max_total, temperature=temperature,
-                         seed=seed, obs=obs, mesh=mesh, rules=rules,
-                         cache_rules=cache_rules)
+    def __init__(self, model: ModelApi, **kw):
+        super().__init__(model, **kw)
+        max_total = self.max_total
+        cache_dtype = self.cache_dtype
         sh = self.shardings
         jit_kw_pf = {} if sh is None else {
             "out_shardings": (sh.logits, sh.cache, sh.pos)}
         jit_kw_dec = {} if sh is None else {
             "out_shardings": (sh.logits, sh.cache)}
         self._prefill = jax.jit(lambda p, b, l: model.prefill(
-            p, b, dtype=jnp.float32, cache_dtype=jnp.float32,
+            p, b, dtype=jnp.float32, cache_dtype=cache_dtype,
             cache_len=max_total, lengths=l), **jit_kw_pf)
         self._decode = jax.jit(lambda p, t, c, s: model.decode_step(
             p, t, c, s, dtype=jnp.float32), **jit_kw_dec)
@@ -328,19 +359,15 @@ class ContinuousScheduler(_SchedulerBase):
     admission, like decode, has a single jit signature for the process
     lifetime."""
 
-    def __init__(self, model: ModelApi, *, slots: int = 4,
-                 max_prompt: int = 64, max_total: int = 128,
-                 temperature: float = 0.0, seed: int = 0,
-                 obs=NULL_OBS, mesh=None, rules=None, cache_rules=None):
-        super().__init__(model, slots=slots, max_prompt=max_prompt,
-                         max_total=max_total, temperature=temperature,
-                         seed=seed, obs=obs, mesh=mesh, rules=rules,
-                         cache_rules=cache_rules)
+    def __init__(self, model: ModelApi, **kw):
+        super().__init__(model, **kw)
         cfg = model.cfg
+        slots, max_total = self.slots, self.max_total
+        cache_dtype = self.cache_dtype
         sh = self.shardings
         crules = None if sh is None else sh.cache_rules
-        self._cache = model.init_cache(slots, max_total, jnp.float32,
-                                       mesh=mesh, cache_rules=crules)
+        self._cache = model.init_cache(slots, max_total, cache_dtype,
+                                       mesh=self.mesh, cache_rules=crules)
         self._pos = jnp.zeros((slots,), jnp.int32)
         self._last_logits = jnp.zeros((slots, 1, cfg.padded_vocab),
                                       jnp.float32)
@@ -352,7 +379,7 @@ class ContinuousScheduler(_SchedulerBase):
         def _admit_fn(params, cache, pos, logits, tokens, length, slot):
             lg1, c1, p1 = model.prefill(
                 params, {"tokens": tokens}, dtype=jnp.float32,
-                cache_dtype=jnp.float32, cache_len=max_total,
+                cache_dtype=cache_dtype, cache_len=max_total,
                 lengths=length)
             cache, pos = model.write_cache_slot(cache, c1, slot, pos=pos,
                                                 one_pos=p1[0],
@@ -404,7 +431,274 @@ class ContinuousScheduler(_SchedulerBase):
         return self._decode_tick(params)
 
 
-SCHEDULERS = {"wave": BatchScheduler, "continuous": ContinuousScheduler}
+class PagedContinuousScheduler(_SchedulerBase):
+    """Continuous batching over the PAGED cache (DESIGN.md §15).
+
+    Attention K/V live in a shared refcounted page pool instead of one
+    ``(slots, max_total)`` ring per lane:
+
+    * **Admission** allocates ``ceil((plen + budget) / page_size)``
+      pages up front (minus any shared prefix) — when the free list is
+      short the head request DEFERS in the queue instead of failing, so
+      memory pressure degrades to queueing latency, never to an OOM.
+    * **Prefix sharing**: prompts are hashed against the resident-prefix
+      trie; matched full-page chunks are retained (refcount++) and the
+      prefill starts after them. Pages are published to the trie at
+      prefill *completion* and forgotten when their refcount hits zero.
+      Only attention-cache families share (dense/moe) — recurrent state
+      is per-request and cannot be borrowed.
+    * **Chunked prefill**: prompts stream in ``prefill_chunk``-sized
+      pieces (a page_size multiple), at most ``chunks_per_tick`` chunk
+      launches per scheduler tick, interleaved with decode steps for the
+      live lanes. A slot flips live only after its last chunk, so decode
+      never observes a half-written prefix: until then its page-map row
+      is all-dummy and its recurrent state is masked via ``live``.
+
+    The device only ever sees static shapes — the page map is a fixed
+    ``(slots, pages_per_slot)`` i32 array — so both entry points keep
+    the single process-lifetime jit signature (PR 5 invariant).
+    """
+
+    def __init__(self, model: ModelApi, *, page_size: int = 16,
+                 cache_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 chunks_per_tick: int = 1,
+                 paged_kernel: Optional[bool] = None, **kw):
+        from repro.serving.pages import (DUMMY_PAGE, PageTable, PrefixTrie,
+                                         pages_per_slot)
+        self.page_size = page_size
+        self.pages_slot = pages_per_slot(
+            kw.get("max_total", 128), page_size)
+        if cache_pages is None:
+            # default: every slot can hold a full-length request (+1 for
+            # the dummy page) — byte-parity with the ring layout; pass
+            # fewer pages to trade capacity for queueing (the
+            # --memory-ceiling benchmark regime)
+            cache_pages = kw.get("slots", 4) * self.pages_slot + 1
+        self.cache_pages = cache_pages
+        super().__init__(
+            model, **kw,
+            **({"page_size": page_size, "cache_pages": cache_pages}
+               if kw.get("mesh") is not None else {}))
+        cfg = model.cfg
+        slots = self.slots
+        if prefill_chunk is None:
+            prefill_chunk = -(-self.max_prompt // page_size) * page_size
+        assert prefill_chunk % page_size == 0 and prefill_chunk > 0, \
+            "prefill_chunk must be a positive page_size multiple"
+        self.prefill_chunk_len = prefill_chunk
+        self.chunks_per_tick = chunks_per_tick
+        if paged_kernel is None:
+            from repro.kernels import runtime
+            paged_kernel = not runtime.default_interpret()
+        self.paged_kernel = paged_kernel
+        # page pools only exist for attention-bearing families; pure-SSM
+        # archs carry O(1) per-slot state and need zero pages
+        self._has_pages = cfg.kind != "ssm"
+        self._shareable = cfg.kind in ("dense", "moe")
+        self._dummy = DUMMY_PAGE
+        self.table = PageTable(cache_pages, page_size)
+        self.trie = PrefixTrie(page_size)
+        # memory-pressure / prefix-sharing counters (benchmarks read
+        # these; obs gauges mirror them per tick)
+        self.page_deferrals = 0
+        self.prefix_pages_hit = 0
+        self.prefix_pages_possible = 0
+
+        self._page_map = np.full((slots, self.pages_slot), DUMMY_PAGE,
+                                 np.int32)
+        self._live = np.zeros((slots,), bool)
+        self._slot_pages: list[Optional[list]] = [None] * slots
+        self._jobs: dict[int, dict] = {}
+
+        sh = self.shardings
+        crules = None if sh is None else sh.cache_rules
+        self._cache = model.init_paged_cache(
+            slots, cache_pages, page_size, self.cache_dtype,
+            mesh=self.mesh, cache_rules=crules)
+        self._pos = jnp.zeros((slots,), jnp.int32)
+        self._last_logits = jnp.zeros((slots, 1, cfg.padded_vocab),
+                                      jnp.float32)
+        if sh is not None:
+            self._pos = jax.device_put(self._pos, sh.pos)
+            self._last_logits = jax.device_put(self._last_logits,
+                                               sh.logits)
+
+        def _chunk_fn(params, cache, logits, tokens, start, valid, row,
+                      slot):
+            c1, lg = model.prefill_chunk(
+                params, cache, tokens, start, valid, row, slot,
+                dtype=jnp.float32)
+            logits = jax.lax.dynamic_update_slice(logits, lg,
+                                                  (slot, 0, 0))
+            return c1, logits
+
+        use_kernel = self.paged_kernel
+        jit_kw_ch = {} if sh is None else {
+            "out_shardings": (sh.paged_cache, sh.logits)}
+        jit_kw_dec = {} if sh is None else {
+            "out_shardings": (sh.logits, sh.paged_cache)}
+        self._chunk_jit = jax.jit(_chunk_fn, **jit_kw_ch)
+        self._decode_jit = jax.jit(
+            lambda p, t, c, s, pm, lv: model.decode_step_paged(
+                p, t, c, s, pm, lv, dtype=jnp.float32,
+                use_kernel=use_kernel), **jit_kw_dec)
+
+    # -- page planning --------------------------------------------------
+    def _plan_pages(self, req: Request, budget: int):
+        """(shared, fresh) page lists for a request, or None to defer.
+
+        Commit is atomic: the trie match is only retained once the fresh
+        allocation is known to fit, so a deferral leaves no refcounts
+        behind."""
+        if not self._has_pages:
+            return [], []
+        plen = len(req.prompt)
+        total = -(-(plen + budget) // self.page_size)
+        assert total <= self.pages_slot
+        shared: list = []
+        if self._shareable:
+            # cap: at least one prompt token always prefills, so the
+            # admission logits come from a real forward pass
+            cap = min((plen - 1) // self.page_size, total)
+            shared = self.trie.match(np.asarray(req.prompt), cap)
+            self.prefix_pages_possible += cap
+        need = total - len(shared)
+        if self.table.num_free < need:
+            return None
+        if shared:
+            self.table.retain(shared)
+            self.prefix_pages_hit += len(shared)
+        fresh = self.table.alloc(need)
+        assert fresh is not None
+        return shared, fresh
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_pages_hit / max(self.prefix_pages_possible, 1)
+
+    # -- slot lifecycle -------------------------------------------------
+    def _slot_ready(self, i: int) -> bool:
+        return bool(self._live[i])
+
+    def _free_slot(self, i: int) -> None:
+        pages = self._slot_pages[i]
+        if pages:
+            for pg in self.table.release(pages):
+                self.trie.forget(pg)
+        self._slot_pages[i] = None
+        self._page_map[i] = self._dummy
+        self._live[i] = False
+        self._jobs.pop(i, None)
+        self.active[i] = None
+
+    def _work_pending(self) -> bool:
+        return bool(self._jobs)
+
+    # -- admission / prefill --------------------------------------------
+    def _admit(self) -> int:
+        """Plan pages + enqueue a chunked-prefill job per free slot.
+        Head-of-line deferral: if the head request's pages don't fit,
+        admission stops until retirements refill the free list."""
+        admitted = 0
+        for i in range(self.slots):
+            if self.active[i] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            budget = self._budget(req)
+            if budget <= 0:
+                self.queue.pop(0)
+                req.budget = budget
+                req.admit_clock = self.clock
+                self._retire(req)
+                continue
+            plan = self._plan_pages(req, budget)
+            if plan is None:
+                self.page_deferrals += 1
+                break
+            self.queue.pop(0)
+            shared, fresh = plan
+            req.budget = budget
+            req.admit_clock = self.clock
+            req.prefix_pages_reused = len(shared)
+            self.active[i] = req
+            pages = shared + fresh
+            self._slot_pages[i] = pages
+            self._jobs[i] = {
+                "req": req, "pages": pages,
+                "start": len(shared) * self.page_size,
+                "plen": len(req.prompt)}
+            admitted += 1
+        return admitted
+
+    def _advance_prefills(self, params) -> None:
+        """Run up to ``chunks_per_tick`` prefill chunks per pending job;
+        completed slots splice their page row in and flip live."""
+        C = self.prefill_chunk_len
+        P = self.pages_slot
+        for slot in list(self._jobs):
+            job = self._jobs[slot]
+            req = job["req"]
+            row = np.full((P,), self._dummy, np.int32)
+            row[: len(job["pages"])] = job["pages"]
+            for _ in range(self.chunks_per_tick):
+                start, plen = job["start"], job["plen"]
+                valid = min(C, plen - start)
+                toks = np.zeros((1, C), np.int32)
+                toks[0, :valid] = req.prompt[start:start + valid]
+                with self.obs.span("prefill_chunk", slot=slot,
+                                   rid=req.rid, start=start):
+                    with self._mesh_ctx():
+                        self._cache, self._last_logits = self._chunk_jit(
+                            params, self._cache, self._last_logits,
+                            jnp.asarray(toks),
+                            jnp.asarray(start, jnp.int32),
+                            jnp.asarray(valid, jnp.int32),
+                            jnp.asarray(row),
+                            jnp.asarray(slot, jnp.int32))
+                req.prefill_chunks += 1
+                job["start"] = start + valid
+                if job["start"] >= plen:
+                    self._page_map[slot] = row
+                    self._live[slot] = True
+                    self._pos = self._pos.at[slot].set(plen)
+                    if self._shareable:
+                        self.trie.register(
+                            np.asarray(req.prompt),
+                            job["pages"][: plen // self.page_size])
+                    self.stats.prefills += 1
+                    del self._jobs[slot]
+                    break
+
+    # -- decode ---------------------------------------------------------
+    def _decode(self, params, tok, cache, pos):
+        return self._decode_jit(params, tok, cache, pos,
+                                jnp.asarray(self._page_map),
+                                jnp.asarray(self._live))
+
+    def _tick(self) -> None:
+        super()._tick()
+        if self.obs.enabled:
+            self.obs.counter(
+                "pages", free=self.table.num_free,
+                occupancy=self.table.occupancy,
+                prefix_hit_rate=self.prefix_hit_rate,
+                deferrals=self.page_deferrals)
+
+    def step(self, params) -> int:
+        """Admit + advance chunked prefills, then one decode step for
+        the live lanes; returns #tokens emitted."""
+        self._tick()
+        with self.obs.span("admission", step=self.clock):
+            self._admit()
+        self._advance_prefills(params)
+        if not self._live.any():
+            return 0
+        return self._decode_tick(params)
+
+
+SCHEDULERS = {"wave": BatchScheduler, "continuous": ContinuousScheduler,
+              "paged": PagedContinuousScheduler}
 
 
 def make_scheduler(kind: str, model: ModelApi, **kw):

@@ -61,6 +61,10 @@ SERVE_PARAM_RULES = ShardingRules((
 
 # Cache leaves: heads/experts first, sequence as the model-axis
 # fallback (table order = contention priority under spec_for_shape).
+# Paged leaves reuse the same head/TP placement; the page pool and
+# in-page offset dims stay replicated (pages are the unit of host-side
+# allocation — splitting them across devices would turn every page-map
+# gather into a collective).
 SERVE_CACHE_RULES = ShardingRules((
     ("cache_kv_heads", "model"),
     ("ssm_heads", "model"),
@@ -68,6 +72,8 @@ SERVE_CACHE_RULES = ShardingRules((
     ("ssm_in", "model"),
     ("cache_seq", "model"),
     ("cache_batch", ("pod", "data")),
+    ("cache_pages", None),
+    ("page_off", None),
     ("head_dim", None),
     ("ssm_state", None),
     ("layers", None),
@@ -119,18 +125,38 @@ class ServeShardings:
     logits: NamedSharding           # (slots, 1, vocab)
     pos: NamedSharding              # (slots,) int32
     replicated: NamedSharding
+    # paged layout (set when serve_shardings gets page_size > 0)
+    paged_cache: Any = None         # NamedSharding tree (page pools)
+    page_map: Optional[NamedSharding] = None   # (slots, pages_per_slot)
+    live: Optional[NamedSharding] = None       # (slots,) bool
+
+
+def paged_cache_shardings(model, mesh: Mesh, slots: int, cache_pages: int,
+                          page_size: int, dtype=jnp.bfloat16, *,
+                          cache_rules: Optional[ShardingRules] = None):
+    """NamedSharding tree matching ``init_paged_cache_tree``'s
+    structure: heads TP over ``model``, page/offset dims replicated."""
+    rules = cache_rules or SERVE_CACHE_RULES
+    abs_c = model.abstract_paged_cache(slots, cache_pages, page_size,
+                                       dtype)
+    axes = model.paged_cache_axes()
+    return _shard_shaped(axes, abs_c, mesh, rules)
 
 
 def serve_shardings(model, mesh: Mesh, *, slots: int, max_total: int,
                     dtype=jnp.float32, serve_window: int = 0,
-                    param_dtype=None,
+                    param_dtype=None, page_size: int = 0,
+                    cache_pages: int = 0,
                     rules: Optional[ShardingRules] = None,
                     cache_rules: Optional[ShardingRules] = None
                     ) -> ServeShardings:
     """Resolve every sharding the serving stack pins at jit boundaries.
 
     ``dtype`` is the cache dtype (shapes only — resolution is dtype-
-    free); ``param_dtype`` defaults to ``dtype``.
+    free); ``param_dtype`` defaults to ``dtype``. Pass ``page_size`` /
+    ``cache_pages`` to additionally resolve the paged cache tree and
+    its page-map/live inputs (replicated — they are tiny i32/bool
+    control state every device needs whole).
     """
     rules = rules or SERVE_PARAM_RULES
     cache_rules = cache_rules or SERVE_CACHE_RULES
@@ -144,11 +170,19 @@ def serve_shardings(model, mesh: Mesh, *, slots: int, max_total: int,
         ("cache_batch", None), (slots, 1), mesh))
     lg = NamedSharding(mesh, cache_rules.spec_for_shape(
         ("cache_batch", None, None), (slots, 1, V), mesh))
+    repl = NamedSharding(mesh, P())
+    paged_kw = {}
+    if page_size:
+        paged_kw = dict(
+            paged_cache=paged_cache_shardings(
+                model, mesh, slots, cache_pages, page_size, dtype,
+                cache_rules=cache_rules),
+            page_map=repl, live=repl)
     return ServeShardings(
         mesh=mesh, rules=rules, cache_rules=cache_rules, params=p_sh,
         cache=c_sh, token=tok, logits=lg,
         pos=NamedSharding(mesh, P()),
-        replicated=NamedSharding(mesh, P()))
+        replicated=repl, **paged_kw)
 
 
 def shard_params(params, model, mesh: Mesh, *,
@@ -162,4 +196,4 @@ def shard_params(params, model, mesh: Mesh, *,
 
 __all__ = ["SERVE_PARAM_RULES", "SERVE_CACHE_RULES", "ServeShardings",
            "serve_shardings", "param_shardings", "cache_shardings",
-           "shard_params"]
+           "paged_cache_shardings", "shard_params"]

@@ -1,0 +1,288 @@
+"""Paged serving correctness (DESIGN.md §15): PageTable/PrefixTrie
+invariants, paged-vs-ring decode parity for every family, chunked
+prefill == one-shot, Pallas kernel parity, cache-dtype plumbing, and
+scheduler-level equivalence with prefix reuse and zero page leaks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serving import (
+    ContinuousScheduler, DUMMY_PAGE, PagedContinuousScheduler, PageTable,
+    PrefixTrie, Request, engine, pages_per_slot, run_trace,
+)
+
+# ---------------------------------------------------------------- pages
+
+
+def test_page_table_alloc_release_roundtrip():
+    t = PageTable(num_pages=8, page_size=4)      # 7 usable + dummy
+    assert t.num_free == 7
+    a = t.alloc(3)
+    b = t.alloc(4)
+    assert a is not None and b is not None
+    assert t.num_free == 0
+    assert DUMMY_PAGE not in a + b
+    assert len(set(a + b)) == 7                  # no double-handout
+    # pool exhausted -> deferral cue, no partial allocation
+    assert t.alloc(1) is None
+    assert t.num_free == 0
+    freed = t.release(a)
+    assert sorted(freed) == sorted(a)
+    assert t.num_free == 3
+    t.release(b)
+    assert t.num_free == 7
+
+
+def test_page_table_refcounts():
+    t = PageTable(num_pages=4, page_size=4)
+    (p,) = t.alloc(1)
+    t.retain([p])                                # shared by two owners
+    assert t.release([p]) == []                  # still referenced
+    assert t.num_free == 2
+    assert t.release([p]) == [p]                 # last owner frees
+    assert t.num_free == 3
+
+
+def test_page_table_occupancy():
+    t = PageTable(num_pages=5, page_size=4)
+    assert t.occupancy == 0.0
+    t.alloc(2)
+    assert t.occupancy == pytest.approx(0.5)
+
+
+def test_prefix_trie_match_register_forget():
+    ps = 4
+    cap = lambda p: (len(p) - 1) // ps
+    trie = PrefixTrie(ps)
+    prompt = np.arange(1, 12, dtype=np.int32)    # 11 tokens, 2 full pages
+    assert trie.match(prompt, cap(prompt)) == []
+    assert trie.register(prompt, [3, 5]) == 2
+    # full-page chunks shared; callers cap at (plen-1)//ps so the page
+    # holding the final prompt token is never shared mid-write
+    assert trie.match(prompt, cap(prompt)) == [3, 5]
+    assert trie.match(prompt[:ps + 1], 1) == [3]
+    assert trie.match(prompt[:ps], cap(prompt[:ps])) == []   # cap == 0
+    divergent = prompt.copy()
+    divergent[1] = 99
+    assert trie.match(divergent, cap(divergent)) == []
+    # forgetting the parent page orphans the chain from the root
+    trie.forget(3)
+    assert trie.match(prompt, cap(prompt)) == []
+    trie.register(prompt, [3, 5])
+    trie.forget(5)
+    assert trie.match(prompt, cap(prompt)) == [3]
+    # first writer keeps a trie slot; duplicates stay unshared
+    assert trie.register(prompt, [3, 7]) == 1    # only chunk 2 republished
+    assert trie.match(prompt, cap(prompt)) == [3, 7]
+
+
+def test_pages_per_slot():
+    assert pages_per_slot(16, 4) == 4
+    assert pages_per_slot(17, 4) == 5
+
+
+# ------------------------------------------------- paged decode parity
+
+FAMILIES = {
+    "dense": ("qwen1.5-0.5b", 0, {}),
+    "dense-window": ("qwen1.5-0.5b", 8, {}),
+    "sliding": ("starcoder2-3b", 0, {"sliding_window": 8}),
+    "moe": ("llama4-scout-17b-a16e", 0, {"moe_capacity_factor": 8.0}),
+    "ssm": ("mamba2-370m", 0, {}),
+    "hybrid": ("recurrentgemma-9b", 0, {"attention_window": 8}),
+}
+
+
+def _tiny(arch, **over):
+    cfg = get_arch(arch).reduced(num_layers=2, d_model=64, d_ff=128,
+                                 vocab_size=128)
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _ring_reference(params, cfg, prompt, max_new, serve_window):
+    max_total = len(prompt) + max_new
+    toks = jnp.asarray(prompt)[None]
+    logits, cache, pos = engine.prefill(
+        params, cfg, {"tokens": toks}, dtype=jnp.float32,
+        cache_dtype=jnp.float32, cache_len=max_total,
+        serve_window=serve_window)
+    out_logits = [np.asarray(logits[0, 0])]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32).reshape(1, 1)
+    out_toks = [int(tok[0, 0])]
+    for _ in range(max_new - 1):
+        logits, cache = engine.decode_step(
+            params, cfg, tok, cache, pos, dtype=jnp.float32,
+            serve_window=serve_window)
+        out_logits.append(np.asarray(logits[0, 0]))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32).reshape(1, 1)
+        out_toks.append(int(tok[0, 0]))
+        pos = pos + 1
+    return out_logits, out_toks
+
+
+def _paged_run(params, cfg, prompt, max_new, serve_window, *, ps=4,
+               chunk=8):
+    plen = len(prompt)
+    P = pages_per_slot(plen + max_new, ps)
+    table = PageTable(P + 1, ps)
+    cache = engine.init_paged_cache_tree(cfg, 1, P + 1, ps, jnp.float32)
+    row = jnp.asarray(table.alloc(P), jnp.int32)
+    padded = np.zeros(((plen + chunk - 1) // chunk) * chunk, np.int32)
+    padded[:plen] = prompt
+    start = 0
+    while start < plen:
+        valid = min(chunk, plen - start)
+        cache, logits = engine.prefill_chunk(
+            params, cfg, cache, jnp.asarray(
+                padded[start:start + chunk])[None],
+            start, valid, row, 0, dtype=jnp.float32,
+            serve_window=serve_window)
+        start += valid
+    out_logits = [np.asarray(logits[0, 0])]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32).reshape(1, 1)
+    out_toks = [int(tok[0, 0])]
+    page_map, live = row[None], jnp.asarray([True])
+    pos = jnp.asarray([plen], jnp.int32)
+    for _ in range(max_new - 1):
+        logits, cache = engine.decode_step_paged(
+            params, cfg, tok, cache, pos, page_map, live,
+            dtype=jnp.float32, serve_window=serve_window)
+        out_logits.append(np.asarray(logits[0, 0]))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32).reshape(1, 1)
+        out_toks.append(int(tok[0, 0]))
+        pos = pos + 1
+    return out_logits, out_toks
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_paged_decode_matches_ring(family):
+    arch, serve_window, over = FAMILIES[family]
+    cfg, _, params = _tiny(arch, **over)
+    prompt = np.random.default_rng(0).integers(
+        1, cfg.vocab_size, size=11).astype(np.int32)
+    ref_l, ref_t = _ring_reference(params, cfg, prompt, 5, serve_window)
+    pg_l, pg_t = _paged_run(params, cfg, prompt, 5, serve_window)
+    assert pg_t == ref_t
+    err = max(np.abs(a - b).max() for a, b in zip(ref_l, pg_l))
+    assert err <= 1e-5, f"{family}: max |logits diff| {err}"
+
+
+def test_chunked_prefill_matches_one_shot():
+    cfg, _, params = _tiny("qwen1.5-0.5b")
+    prompt = np.random.default_rng(1).integers(
+        1, cfg.vocab_size, size=13).astype(np.int32)
+    # one-shot: chunk covers the whole (padded) prompt
+    l_one, t_one = _paged_run(params, cfg, prompt, 4, 0, ps=4, chunk=16)
+    l_chk, t_chk = _paged_run(params, cfg, prompt, 4, 0, ps=4, chunk=4)
+    assert t_chk == t_one
+    err = max(np.abs(a - b).max() for a, b in zip(l_one, l_chk))
+    assert err <= 1e-5
+
+
+def test_paged_kernel_matches_jnp_gather():
+    from repro.kernels.paged_attn import paged_decode
+    rng = np.random.default_rng(2)
+    B, P, ps, K, G, hd = 2, 3, 4, 2, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, K, G, hd)), jnp.float32)
+    k_pages = jnp.asarray(rng.normal(size=(P + 1, ps, K, hd)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(P + 1, ps, K, hd)), jnp.float32)
+    page_map = jnp.asarray([[1, 2, 3], [3, 1, 2]], jnp.int32)
+    pos = jnp.asarray([5, 9], jnp.int32)
+    for window in (0, 4):
+        out = paged_decode(q, k_pages, v_pages, page_map, pos,
+                           window=window, interpret=True)
+        # reference: gather + masked softmax
+        kk = k_pages[page_map].reshape(B, P * ps, K, hd)
+        vv = v_pages[page_map].reshape(B, P * ps, K, hd)
+        k_pos = jnp.arange(P * ps)[None, :]
+        ok = k_pos <= pos[:, None]
+        if window:
+            ok &= k_pos > pos[:, None] - window
+        s = jnp.einsum("bkgh,btkh->bkgt", q, kk) / np.sqrt(hd)
+        s = jnp.where(ok[:, None, None, :], s, -1e30)
+        ref = jnp.einsum("bkgt,btkh->bkgh", jax.nn.softmax(s, -1), vv)
+        assert float(jnp.abs(out - ref).max()) <= 1e-5
+
+
+# --------------------------------------------------- cache-dtype plumb
+
+
+@pytest.mark.parametrize("sched_cls",
+                         [ContinuousScheduler, PagedContinuousScheduler])
+def test_cache_dtype_reaches_cache_leaves(sched_cls):
+    cfg, model, params = _tiny("qwen1.5-0.5b")
+    sched = sched_cls(model, slots=2, max_prompt=8, max_total=16,
+                      cache_dtype=jnp.bfloat16)
+    sched.submit(Request(rid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                         max_new=2))
+    for _ in range(16):
+        sched.step(params)
+        if not sched.outstanding:
+            break
+    floating = [leaf.dtype for leaf in jax.tree.leaves(sched._cache)
+                if jnp.issubdtype(leaf.dtype, jnp.floating)]
+    assert floating and all(d == jnp.bfloat16 for d in floating)
+    assert sched.stats.requests_done == 1
+
+
+# ------------------------------------------------- scheduler-level e2e
+
+
+def _trace(cfg, rng, n_req, template=0):
+    tmpl = rng.integers(1, cfg.vocab_size, size=template).astype(np.int32)
+    arrivals, step = [], 0
+    for rid in range(n_req):
+        tail = rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(3, 10))).astype(np.int32)
+        prompt = np.concatenate([tmpl, tail])[:14].astype(np.int32)
+        arrivals.append((step, Request(rid=rid, prompt=prompt,
+                                       max_new=int(rng.integers(2, 6)))))
+        step += int(rng.poisson(2.0))
+    return arrivals
+
+
+def test_paged_scheduler_matches_continuous():
+    cfg, model, params = _tiny("qwen1.5-0.5b")
+    mk = lambda: np.random.default_rng(7)
+    ring = _trace(cfg, mk(), 6)
+    paged = _trace(cfg, mk(), 6)
+    kw = dict(slots=2, max_prompt=14, max_total=20, temperature=0.0)
+    s_ring = run_trace(ContinuousScheduler(model, **kw), params, ring)
+    sched = PagedContinuousScheduler(model, page_size=4, prefill_chunk=8,
+                                     **kw)
+    s_paged = run_trace(sched, params, paged)
+    assert s_paged.requests_done == s_ring.requests_done == 6
+    for (_, a), (_, b) in zip(ring, paged):
+        assert b.out_tokens == a.out_tokens, f"rid {a.rid} diverged"
+    # every page returned to the pool, trie fully forgotten
+    assert sched.table.num_free == sched.cache_pages - 1
+    p0 = ring[0][1].prompt
+    assert sched.trie.match(p0, (len(p0) - 1) // 4) == []
+    assert len(sched.trie) == 0
+    # chunk=8 over up-to-14-token prompts -> some prompts take 2 chunks
+    assert any(r.prefill_chunks >= 2 for r in s_paged.records)
+
+
+def test_paged_scheduler_prefix_reuse_and_deferral():
+    cfg, model, params = _tiny("qwen1.5-0.5b")
+    rng = np.random.default_rng(11)
+    arrivals = _trace(cfg, rng, 8, template=8)
+    # pool sized below slots * pages_per_slot: deferrals must engage
+    sched = PagedContinuousScheduler(
+        model, page_size=4, cache_pages=9, slots=2, max_prompt=14,
+        max_total=20, temperature=0.0)
+    stats = run_trace(sched, params, arrivals)
+    assert stats.requests_done == 8
+    reused = sum(r.prefix_pages_reused for r in stats.records)
+    assert reused > 0                    # shared template actually hit
+    assert sched.prefix_hit_rate > 0
+    assert sched.table.num_free == sched.cache_pages - 1   # no leaks
